@@ -1,0 +1,40 @@
+"""Benchmark for paper Fig. 12: LamaAccel and pLUTo speedup / energy
+saving over the Edge-TPU baseline across the five LLM workloads."""
+
+from __future__ import annotations
+
+import statistics as st
+
+from repro.core.pim import calibrated_models, fig12_table
+from repro.core.pim.accel import tpu_cost
+from repro.core.pim.workloads import table_vi_workloads
+
+
+def rows() -> list[dict]:
+    lama, _ = calibrated_models()
+    table = fig12_table()
+    ws = {w.name: w for w in table_vi_workloads()}
+    out = []
+    for r in table:
+        lat_us = lama.cost(ws[r["workload"]]).latency_s * 1e6
+        out.append({
+            "name": f"fig12/{r['workload']}",
+            "us_per_call": lat_us,
+            "derived": (
+                f"speedup_vs_tpu={r['lama_speedup_vs_tpu']:.2f} "
+                f"energy_saving={r['lama_energy_saving_vs_tpu']:.2f} "
+                f"pluto_speedup={r['pluto_speedup_vs_tpu']:.2f} "
+                f"avg_bits={r['avg_bits']}"),
+        })
+    out.append({
+        "name": "fig12/averages",
+        "us_per_call": 0.0,
+        "derived": (
+            f"speedup={st.mean(x['lama_speedup_vs_tpu'] for x in table):.2f} "
+            f"(paper 4.1) energy="
+            f"{st.mean(x['lama_energy_saving_vs_tpu'] for x in table):.2f} "
+            f"(paper 7.1) vs_pluto="
+            f"{st.mean(x['lama_speedup_vs_tpu']/x['pluto_speedup_vs_tpu'] for x in table):.2f} "
+            f"(paper 1.7)"),
+    })
+    return out

@@ -1,0 +1,33 @@
+"""Benchmark for paper Fig. 13: LamaAccel perf-per-area and energy
+saving vs the RTX A6000 baseline."""
+
+from __future__ import annotations
+
+import statistics as st
+
+from repro.core.pim import fig13_table
+
+
+def rows() -> list[dict]:
+    table = fig13_table()
+    out = []
+    for r in table:
+        out.append({
+            "name": f"fig13/{r['workload']}",
+            "us_per_call": 0.0,
+            "derived": (
+                f"perf_per_area={r['perf_per_area_vs_gpu']:.2f} "
+                f"energy_saving={r['energy_saving_vs_gpu']:.2f} "
+                f"raw_speedup={r['raw_speedup_vs_gpu']:.3f}"),
+        })
+    out.append({
+        "name": "fig13/averages",
+        "us_per_call": 0.0,
+        "derived": (
+            f"perf_per_area="
+            f"{st.mean(x['perf_per_area_vs_gpu'] for x in table):.2f} "
+            f"(paper 7.2) energy="
+            f"{st.mean(x['energy_saving_vs_gpu'] for x in table):.2f} "
+            f"(paper 12, range 6.1-19.2)"),
+    })
+    return out

@@ -1,0 +1,54 @@
+"""Wall-clock microbenchmarks of the core ops on this host (CPU):
+quantize / encode / decode / counting / kernel-interpret paths.
+These give the us_per_call numbers real meaning on the machine the
+harness runs on (TPU numbers come from the roofline analysis)."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import exponent_dotprod as ed
+from repro.core import exponential_quant as eq
+
+
+def _time(fn, *args, iters=20):
+    fn(*args)  # compile
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def rows() -> list[dict]:
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(512, 512)) * 0.05, jnp.float32)
+    w = jnp.asarray(r.normal(size=(512, 512)) * 0.05, jnp.float32)
+    codes, qp = eq.quantize(w, 6)
+    lut = eq.decode_table(qp)
+
+    fit = jax.jit(lambda t: eq.fit(t, 6).alpha)
+    enc = jax.jit(lambda t: eq.encode(t, qp))
+    dec = jax.jit(lambda c: eq.decode(c, qp))
+    deq_mm = jax.jit(
+        lambda a, c: jnp.matmul(a, lut[c.astype(jnp.int32)]))
+    fp_mm = jax.jit(jnp.matmul)
+
+    out = [
+        {"name": "micro/fit_512x512", "us_per_call": _time(fit, w),
+         "derived": "base-grid alternating LS fit"},
+        {"name": "micro/encode", "us_per_call": _time(enc, w),
+         "derived": "log+round+clip"},
+        {"name": "micro/decode_lut", "us_per_call": _time(dec, codes),
+         "derived": "256-entry gather"},
+        {"name": "micro/dequant_matmul", "us_per_call": _time(deq_mm, x, codes),
+         "derived": "decode fused into matmul"},
+        {"name": "micro/fp_matmul", "us_per_call": _time(fp_mm, x, w),
+         "derived": "baseline"},
+    ]
+    return out

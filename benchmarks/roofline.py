@@ -1,0 +1,56 @@
+"""Roofline table reader (deliverable g): aggregates the dry-run
+artifacts into the per-(arch x shape x mesh) three-term table used by
+EXPERIMENTS.md §Roofline."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ART = Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def load_cells(mesh: str = "pod16x16") -> list[dict]:
+    cells = []
+    d = ART / mesh
+    if not d.exists():
+        return cells
+    for p in sorted(d.glob("*.json")):
+        rec = json.loads(p.read_text())
+        parts = p.stem.split("__")
+        rec["variant"] = "__".join(parts[2:]) if len(parts) > 2 else None
+        cells.append(rec)
+    return cells
+
+
+def rows() -> list[dict]:
+    out = []
+    for mesh in ("pod16x16", "pod2x16x16"):
+        ok = skip = err = 0
+        for cell in load_cells(mesh):
+            s = cell.get("status")
+            if s == "skip":
+                skip += 1
+                continue
+            if s != "ok":
+                err += 1
+                continue
+            ok += 1
+            r = cell["roofline"]
+            dom = r["dominant"].replace("t_", "").replace("_s", "")
+            variant = f"/{cell['variant']}" if cell.get("variant") else ""
+            out.append({
+                "name": f"roofline/{mesh}/{cell['arch']}/{cell['shape']}{variant}",
+                "us_per_call": r[r["dominant"]] * 1e6,
+                "derived": (
+                    f"dom={dom} tc={r['t_compute_s']:.3e} "
+                    f"tm={r['t_memory_s']:.3e} tx={r['t_collective_s']:.3e} "
+                    f"useful={r['useful_flops_ratio']:.3f} "
+                    f"frac={r.get('roofline_fraction_of_bound', 0) or 0:.3f}"),
+            })
+        out.append({
+            "name": f"roofline/{mesh}/summary",
+            "us_per_call": 0.0,
+            "derived": f"ok={ok} skip={skip} error={err}",
+        })
+    return out

@@ -1,0 +1,39 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import (
+        fig12_lamaaccel_vs_tpu,
+        fig13_lamaaccel_vs_gpu,
+        microbench,
+        roofline,
+        table4_area,
+        table5_bulk_mult,
+        table6_quant_quality,
+    )
+
+    modules = [
+        table5_bulk_mult,       # paper Table V
+        table4_area,            # paper Table IV
+        fig12_lamaaccel_vs_tpu, # paper Fig 12
+        fig13_lamaaccel_vs_gpu, # paper Fig 13
+        table6_quant_quality,   # paper Table VI (proxy)
+        roofline,               # deliverable (g)
+        microbench,             # host-CPU wall clock
+    ]
+    print("name,us_per_call,derived")
+    for mod in modules:
+        try:
+            for row in mod.rows():
+                derived = str(row["derived"]).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.2f},{derived}")
+                sys.stdout.flush()
+        except Exception as e:  # keep the harness robust
+            print(f"{mod.__name__},0.00,ERROR {type(e).__name__}: {e}")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,23 @@
+"""Benchmark for paper Table IV: Lama area/power overhead."""
+
+from __future__ import annotations
+
+from repro.core.pim import lama_area_overhead
+
+
+def rows() -> list[dict]:
+    rep = lama_area_overhead()
+    out = [{
+        "name": "table4/total_overhead",
+        "us_per_call": 0.0,
+        "derived": (f"{rep.total_mm2:.3f} mm2 = {rep.overhead_pct:.2f}% of "
+                    f"8GB HBM2 (paper 1.32 mm2 / 2.47%)"),
+    }]
+    for r in rep.rows():
+        out.append({
+            "name": f"table4/{r['unit'].lower()}",
+            "us_per_call": 0.0,
+            "derived": (f"area={r['area_um2_per_bank']:.1f} um2/bank "
+                        f"power={r['power_mw_per_bank']:.2f} mW/bank"),
+        })
+    return out

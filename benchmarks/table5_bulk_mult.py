@@ -1,0 +1,45 @@
+"""Benchmark for paper Table V: bulk 4/8-bit multiplication on Lama vs
+pLUTo / SIMDRAM / CPU (1024 ops, parallelism 4)."""
+
+from __future__ import annotations
+
+from repro.core.pim import (
+    cpu_bulk_cost,
+    lama_bulk_cost,
+    lama_command_reduction_vs_pluto,
+    pluto_bulk_cost,
+    simdram_bulk_cost,
+)
+
+PAPER = {
+    (4, "Lama"): (583, 25.8), (4, "pLUTo"): (2240, 247.4),
+    (4, "SIMDRAM"): (7964, 151.23),
+    (8, "Lama"): (2534, 118.8), (8, "pLUTo"): (8963, 989.7),
+    (8, "SIMDRAM"): (34065, 646.9), (8, "CPU"): (9760.4, 7900.0),
+}
+
+
+def rows() -> list[dict]:
+    out = []
+    for bits in (4, 8):
+        costs = [lama_bulk_cost(1024, bits), pluto_bulk_cost(1024, bits),
+                 simdram_bulk_cost(1024, bits)]
+        if bits == 8:
+            costs.append(cpu_bulk_cost(1024))
+        for c in costs:
+            p_lat, p_e = PAPER[(bits, c.name)]
+            out.append({
+                "name": f"table5/int{bits}/{c.name.lower()}",
+                "us_per_call": c.latency_ns / 1e3,
+                "derived": (
+                    f"energy_nJ={c.energy_nj:.2f} gops={c.gops:.3f} "
+                    f"acts={c.counts.act} cmds={c.counts.total} "
+                    f"paper_lat={p_lat} paper_e={p_e} "
+                    f"lat_err={(c.latency_ns-p_lat)/p_lat*100:+.2f}%"),
+            })
+    out.append({
+        "name": "table5/cmd_reduction_vs_pluto_int4",
+        "us_per_call": 0.0,
+        "derived": f"{lama_command_reduction_vs_pluto():.2f}x (paper 19.4x)",
+    })
+    return out

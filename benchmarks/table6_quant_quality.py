@@ -1,0 +1,60 @@
+"""Benchmark for paper Table VI (proxy — DESIGN.md §8 item 4).
+
+The paper's exact accuracies need HF BERT/BART/GPT-2 + GLUE/SQuAD data,
+unavailable offline.  We reproduce the *structure* of the result on our
+JAX models: the DNA-TEQ mixed-precision search trades average bitwidth
+against output fidelity exactly as Table VI does per task — sweeping the
+SQNR target traces the precision/quality curve (avg bits in the paper's
+3.4-6.5 band; top-1 logit agreement and relative logit RMSE as the
+<1%-accuracy-loss proxies).
+"""
+
+from __future__ import annotations
+
+import statistics as st
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.configs.base import RunShape
+from repro.core import lama_layers as ll
+from repro.models import api as mapi
+
+ARCHS = ("olmo-1b", "qwen3-1.7b", "rwkv6-3b")
+SHAPE = RunShape("bench", 32, 2, "train")
+SQNR_TARGETS = (22.0, 28.0, 34.0)
+
+
+def rows() -> list[dict]:
+    out = []
+    for arch in ARCHS:
+        cfg = get_config(arch, tiny=True).replace(compute_dtype="float32")
+        api = mapi.get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0))
+        batch = mapi.synth_batch(cfg, SHAPE)
+        ref, _ = api.forward(params, batch["tokens"], cfg,
+                             prefix_embeds=batch.get("prefix_embeds"))
+        for tgt in SQNR_TARGETS:
+            t0 = time.time()
+            qparams, report = ll.quantize_tree_mixed(
+                params, min_sqnr_db=tgt, axes=api.logical_axes())
+            t_search = time.time() - t0
+            got, _ = api.forward(qparams, batch["tokens"], cfg,
+                                 prefix_embeds=batch.get("prefix_embeds"))
+            agree = float(jnp.mean(
+                (jnp.argmax(got, -1) == jnp.argmax(ref, -1))
+                .astype(jnp.float32)))
+            rel = float(jnp.sqrt(jnp.mean((got - ref) ** 2)) /
+                        (jnp.std(ref) + 1e-9))
+            bits = [b for b, _ in report.values()]
+            out.append({
+                "name": f"table6/{arch}/sqnr{int(tgt)}",
+                "us_per_call": t_search * 1e6,
+                "derived": (
+                    f"avg_bits={st.mean(bits):.2f} (paper band 3.4-6.5) "
+                    f"top1_agreement={agree:.3f} rel_logit_rmse={rel:.3f} "
+                    f"tensors={len(bits)}"),
+            })
+    return out

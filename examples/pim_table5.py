@@ -1,0 +1,55 @@
+"""Reproduce paper Table V + the LamaAccel figures from the rebuilt
+command-level PIM instrument, printed side by side with the paper's
+reported numbers.
+
+Run:  PYTHONPATH=src python examples/pim_table5.py
+"""
+
+from repro.core.pim import (
+    cpu_bulk_cost,
+    fig12_table,
+    fig13_table,
+    lama_area_overhead,
+    lama_bulk_cost,
+    pluto_bulk_cost,
+    simdram_bulk_cost,
+)
+
+PAPER = {
+    (4, "Lama"): (583, 25.8), (4, "pLUTo"): (2240, 247.4),
+    (4, "SIMDRAM"): (7964, 151.23),
+    (8, "Lama"): (2534, 118.8), (8, "pLUTo"): (8963, 989.7),
+    (8, "SIMDRAM"): (34065, 646.9), (8, "CPU"): (9760.4, 7900.0),
+}
+
+
+def main():
+    print(f"{'method':10s} {'bits':>4s} {'lat ns':>9s} {'paper':>8s} "
+          f"{'E nJ':>8s} {'paper':>8s} {'ACTs':>6s} {'cmds':>6s}")
+    for bits in (4, 8):
+        rows = [lama_bulk_cost(1024, bits), pluto_bulk_cost(1024, bits),
+                simdram_bulk_cost(1024, bits)]
+        if bits == 8:
+            rows.append(cpu_bulk_cost(1024))
+        for r in rows:
+            pl, pe = PAPER[(bits, r.name)]
+            print(f"{r.name:10s} {bits:4d} {r.latency_ns:9.1f} {pl:8.0f} "
+                  f"{r.energy_nj:8.2f} {pe:8.2f} {r.counts.act:6d} "
+                  f"{r.counts.total:6d}")
+    a = lama_area_overhead()
+    print(f"\narea overhead: {a.total_mm2:.2f} mm2 = {a.overhead_pct:.2f}% "
+          f"(paper: 1.32 mm2 / 2.47%)")
+
+    print("\nLamaAccel vs TPU (fig 12):")
+    for r in fig12_table():
+        print(f"  {r['workload']:14s} speedup {r['lama_speedup_vs_tpu']:5.2f}x  "
+              f"energy {r['lama_energy_saving_vs_tpu']:5.2f}x  "
+              f"({r['avg_bits']:.2f} avg bits)")
+    print("LamaAccel vs GPU (fig 13):")
+    for r in fig13_table():
+        print(f"  {r['workload']:14s} perf/area {r['perf_per_area_vs_gpu']:5.2f}x  "
+              f"energy {r['energy_saving_vs_gpu']:5.2f}x")
+
+
+if __name__ == "__main__":
+    main()

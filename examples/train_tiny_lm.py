@@ -1,0 +1,42 @@
+"""Train a tiny OLMo-style LM for a few hundred steps on CPU, with a
+mid-run simulated preemption + bit-exact resume — the fault-tolerance
+path of the production trainer (atomic checkpoints + restart-stable
+data).
+
+Run:  PYTHONPATH=src python examples/train_tiny_lm.py
+"""
+
+import tempfile
+from pathlib import Path
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.runtime.trainer import TrainConfig, Trainer
+
+
+def main():
+    cfg = get_config("olmo-1b", tiny=True)
+    ckpt = Path(tempfile.mkdtemp()) / "ckpt"
+    base = dict(global_batch=8, seq_len=64, lr=2e-3, ckpt_dir=str(ckpt),
+                ckpt_every=50, log_every=50, seed=0)
+
+    print("== phase 1: train to step 150, then 'preemption' ==")
+    out1 = Trainer(cfg, TrainConfig(steps=150, **base)).run()
+
+    print("== phase 2: resume from the latest atomic checkpoint ==")
+    out2 = Trainer(cfg, TrainConfig(steps=300, **base)).run()
+    assert out2["history"][0]["step"] == 150, "resumed at the checkpoint"
+
+    losses = [h["loss"] for h in out1["history"] + out2["history"]]
+    first, last = np.mean(losses[:10]), np.mean(losses[-10:])
+    print(f"\nloss {first:.3f} -> {last:.3f} over {len(losses)} steps "
+          f"(resume was seamless: data stream and optimizer state both "
+          f"restart-stable)")
+    assert last < first, "the model must learn"
+    if out2["stragglers"]:
+        print(f"straggler watchdog flagged {len(out2['stragglers'])} slow steps")
+
+
+if __name__ == "__main__":
+    main()

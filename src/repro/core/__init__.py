@@ -1,0 +1,5 @@
+"""Core contribution of the paper: DNA-TEQ exponential quantization,
+exponent-domain (counting) dot products, LUT machinery, quantized layers,
+and the command-level PIM instrument (repro.core.pim)."""
+
+from repro.core import exponential_quant, exponent_dotprod, lut, lama_layers  # noqa: F401

@@ -1,0 +1,159 @@
+"""Eq. 1 of the paper: exponent-domain dot products via counting.
+
+DNA-TEQ encodes ``A_i = S_Ai (aA * b**eA_i + bA)`` and
+``W_i = S_Wi (aW * b**eW_i + bW)``.  The dot product expands into four
+terms (paper Eq. 1), each computable by *counting* signed occurrences of
+exponent values — the operation LamaAccel maps onto DRAM counter
+subarrays (§V-C):
+
+    T1 = aA*aW * sum_i s_i b**(eA_i + eW_i)
+    T2 = aW*bA * sum_i s_i b**(eW_i)
+    T3 = aA*bW * sum_i s_i b**(eA_i)
+    T4 = bA*bW * sum_i s_i               with  s_i = S_Ai * S_Wi
+
+This module provides
+
+* :func:`counting_dot` / :func:`counting_matmul` — the **paper-faithful**
+  formulation: build signed histograms of exponent occurrences (the
+  counter-subarray analog; histograms realized as one-hot contractions,
+  which on TPU map onto the MXU), then post-process by multiplying counts
+  with the power table — exactly the logic-die post-processing step.
+* :func:`dequant_matmul` — the **TPU-native** formulation: decode both
+  operands through their 256-entry LUTs and issue a single MXU matmul.
+
+The two are *algebraically identical*:  expanding
+``sum_i dec(A_i)·dec(W_i)`` term-by-term reproduces T1..T4 because
+``b**eA · b**eW = b**(eA+eW)``.  Tests assert agreement to float tolerance
+for every (bitsA, bitsW) pair; this identity is why the fused
+``lut_dequant_matmul`` Pallas kernel is the performance path on TPU
+(DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.exponential_quant import (
+    ExpQuantParams,
+    decode,
+    split_code,
+)
+
+
+def _power_table(base: jax.Array, lo: int, hi: int) -> jax.Array:
+    """[hi-lo+1] table of base**k for k in [lo, hi]."""
+    ks = jnp.arange(lo, hi + 1, dtype=jnp.float32)
+    return jnp.power(base.astype(jnp.float32), ks)
+
+
+def signed_histogram(values: jax.Array, signs: jax.Array, lo: int, hi: int) -> jax.Array:
+    """Signed occurrence counts of ``values`` over [lo, hi].
+
+    ``hist[k] = sum_i signs_i * [values_i == lo + k]`` — the counter
+    subarray increment/decrement (XNOR of signs selects the direction).
+    Implemented as a one-hot contraction so the same shape maps onto the
+    MXU in the Pallas kernel.
+    """
+    onehot = jax.nn.one_hot(values - lo, hi - lo + 1, dtype=jnp.float32)
+    return jnp.einsum("...i,...ik->...k", signs.astype(jnp.float32), onehot)
+
+
+def counting_dot(
+    codes_a: jax.Array,
+    pa: ExpQuantParams,
+    codes_w: jax.Array,
+    pw: ExpQuantParams,
+) -> jax.Array:
+    """Paper-faithful Eq.1 dot product of two 1-D code vectors.
+
+    Requires the two quantizers to share a base (the paper uses one base
+    per layer pair); asserts via arithmetic rather than branching.
+    """
+    sa, ea = split_code(codes_a, pa)
+    sw, ew = split_code(codes_w, pw)
+    s = (sa * sw).astype(jnp.float32)
+
+    lo_a, hi_a = pa.e_min, pa.e_max
+    lo_w, hi_w = pw.e_min, pw.e_max
+    lo_s, hi_s = lo_a + lo_w, hi_a + hi_w
+
+    hist_sum = signed_histogram(ea + ew, s, lo_s, hi_s)   # counts of eA+eW
+    hist_w = signed_histogram(ew, s, lo_w, hi_w)          # counts of eW
+    hist_a = signed_histogram(ea, s, lo_a, hi_a)          # counts of eA
+    n_signed = jnp.sum(s)                                 # T4 counter
+
+    base = pa.base
+    t1 = pa.alpha * pw.alpha * jnp.dot(hist_sum, _power_table(base, lo_s, hi_s))
+    t2 = pw.alpha * pa.beta * jnp.dot(hist_w, _power_table(base, lo_w, hi_w))
+    t3 = pa.alpha * pw.beta * jnp.dot(hist_a, _power_table(base, lo_a, hi_a))
+    t4 = pa.beta * pw.beta * n_signed
+    return t1 + t2 + t3 + t4
+
+
+def counting_matmul(
+    codes_a: jax.Array,  # [M, K] uint8
+    pa: ExpQuantParams,
+    codes_w: jax.Array,  # [K, N] uint8
+    pw: ExpQuantParams,
+) -> jax.Array:
+    """[M, N] matmul in the counting formulation (input-stationary).
+
+    Mirrors LamaAccel's dataflow: for each output neuron the counters
+    accumulate signed occurrences over the contraction axis; the power
+    tables then collapse counts into the output activation.  Intended as
+    an oracle (O(M·N·K·E) one-hot work) — use :func:`dequant_matmul` or
+    the Pallas kernel for performance.
+    """
+    sa, ea = split_code(codes_a, pa)   # [M, K]
+    sw, ew = split_code(codes_w, pw)   # [K, N]
+
+    lo_a, hi_a = pa.e_min, pa.e_max
+    lo_w, hi_w = pw.e_min, pw.e_max
+    lo_s, hi_s = lo_a + lo_w, hi_a + hi_w
+
+    s = (sa[:, :, None] * sw[None, :, :]).astype(jnp.float32)     # [M,K,N]
+    e_sum = ea[:, :, None] + ew[None, :, :]                       # [M,K,N]
+
+    oh_sum = jax.nn.one_hot(e_sum - lo_s, hi_s - lo_s + 1, dtype=jnp.float32)
+    hist_sum = jnp.einsum("mkn,mkne->mne", s, oh_sum)
+
+    oh_w = jax.nn.one_hot(ew - lo_w, hi_w - lo_w + 1, dtype=jnp.float32)
+    hist_w = jnp.einsum("mkn,kne->mne", s, oh_w)
+
+    oh_a = jax.nn.one_hot(ea - lo_a, hi_a - lo_a + 1, dtype=jnp.float32)
+    hist_a = jnp.einsum("mkn,mke->mne", s, oh_a)
+
+    n_signed = jnp.sum(s, axis=1)                                  # [M,N]
+
+    base = pa.base
+    t1 = pa.alpha * pw.alpha * jnp.einsum(
+        "mne,e->mn", hist_sum, _power_table(base, lo_s, hi_s))
+    t2 = pw.alpha * pa.beta * jnp.einsum(
+        "mne,e->mn", hist_w, _power_table(base, lo_w, hi_w))
+    t3 = pa.alpha * pw.beta * jnp.einsum(
+        "mne,e->mn", hist_a, _power_table(base, lo_a, hi_a))
+    t4 = pa.beta * pw.beta * n_signed
+    return t1 + t2 + t3 + t4
+
+
+def dequant_matmul(
+    codes_a: jax.Array,
+    pa: ExpQuantParams,
+    codes_w: jax.Array,
+    pw: ExpQuantParams,
+    dtype=jnp.float32,
+) -> jax.Array:
+    """TPU-native path: LUT-decode both operands, one MXU matmul."""
+    a = decode(codes_a, pa, dtype)
+    w = decode(codes_w, pw, dtype)
+    return jnp.matmul(a, w, preferred_element_type=jnp.float32)
+
+
+def unique_exponent_count(pa: ExpQuantParams, pw: ExpQuantParams) -> int:
+    """Number of distinct counters per output neuron (paper §V: 'only 2^6
+    unique exponents have to be counted' for a 6-bit layer)."""
+    n_sum = (pa.e_max + pw.e_max) - (pa.e_min + pw.e_min) + 1
+    n_a = pa.e_max - pa.e_min + 1
+    n_w = pw.e_max - pw.e_min + 1
+    return n_sum + n_a + n_w + 1

@@ -1,0 +1,272 @@
+"""Lama-quantized layers: drop-in dense/einsum that accept either plain
+weights or DNA-TEQ code tensors (DESIGN.md §2b).
+
+Every matmul in the model zoo funnels through :func:`dense` /
+:func:`dense_general`.  A weight leaf is either
+
+* a ``jnp`` array (paper-faithful bf16/f32 baseline), or
+* a qtensor dict ``{"codes": uint8, "lut": [256], "qmeta": [4]}``
+  produced by :func:`quantize_tree` — codes live in HBM (1 B/param), the
+  256-entry decode LUT is the VMEM-resident "open row".
+
+Dequantization happens at the matmul site (fused into the Pallas kernel
+on TPU; pure gather+matmul under jit elsewhere), so the full-precision
+weight never round-trips through HBM.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exponential_quant as eq
+
+# Toggled by ops layer when the Pallas kernel should be used. Kept as a
+# module switch so models stay oblivious.
+_USE_PALLAS_KERNEL = False
+
+
+def use_pallas_kernel(enable: bool = True) -> None:
+    global _USE_PALLAS_KERNEL
+    _USE_PALLAS_KERNEL = enable
+
+
+def materialize(w, dtype=jnp.bfloat16) -> jax.Array:
+    """Decode a weight leaf to a dense array of ``dtype``."""
+    if eq.is_qtensor(w):
+        return w["lut"].astype(dtype)[w["codes"].astype(jnp.int32)]
+    return w.astype(dtype)
+
+
+def dense(x: jax.Array, w, *, dtype=None) -> jax.Array:
+    """``x @ w`` where ``w`` may be quantized.  Contracts last axis of x
+    with first axis of w."""
+    cdtype = dtype or x.dtype
+    if eq.is_qtensor(w):
+        if _USE_PALLAS_KERNEL and w["codes"].ndim == 2 and x.ndim >= 2:
+            from repro.kernels.lut_dequant_matmul import ops as _ops
+
+            lead = x.shape[:-1]
+            x2 = x.reshape((-1, x.shape[-1]))
+            out = _ops.lut_dequant_matmul(x2, w["codes"], w["lut"])
+            return out.reshape(lead + (w["codes"].shape[-1],)).astype(cdtype)
+        wf = materialize(w, cdtype)
+        return jnp.matmul(x.astype(cdtype), wf, preferred_element_type=jnp.float32).astype(cdtype)
+    return jnp.matmul(
+        x.astype(cdtype), w.astype(cdtype), preferred_element_type=jnp.float32
+    ).astype(cdtype)
+
+
+def dense_general(x: jax.Array, w, contract_spec: str, *, dtype=None) -> jax.Array:
+    """Einsum with a possibly-quantized weight, e.g. 'bsd,dnh->bsnh'."""
+    cdtype = dtype or x.dtype
+    wf = materialize(w, cdtype)
+    return jnp.einsum(
+        contract_spec, x.astype(cdtype), wf, preferred_element_type=jnp.float32
+    ).astype(cdtype)
+
+
+# ----------------------------------------------------------------------
+# Tree-level quantization
+# ----------------------------------------------------------------------
+
+# weights consumed through dense()/materialize() — safe to quantize.
+_QUANT_NAMES = {"out", "tokens", "enc_in"}
+# routing/modulation weights: numerically load-bearing far beyond their
+# size (router flips top-k experts; LoRA adjusters modulate token-shift
+# interpolants) — production quantization recipes keep these fp, and so
+# does the paper's >=99%-accuracy constraint in practice.
+_QUANT_SKIP = {"router", "lora_a", "lora_b", "decay_a", "decay_b", "wkv"}
+
+
+def default_predicate(path: tuple, leaf) -> bool:
+    """Quantize matmul weights only (the paper quantizes FC/GEMM weights,
+    §V-A): leaves named w* or in the known projection set.  Parameters
+    used via direct arithmetic (token-shift mus, decays, norms, conv
+    taps) and routing/modulation weights stay fp."""
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if not jnp.issubdtype(leaf.dtype, jnp.floating):
+        return False
+    name = str(path[-1]).lower()
+    if name in _QUANT_SKIP:
+        return False
+    if name in _QUANT_NAMES:
+        return True
+    return name.startswith("w") and "conv" not in name
+
+
+def _path_str(path) -> tuple:
+    out = []
+    for p in path:
+        out.append(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+    return tuple(out)
+
+
+def _quantize_stacked(leaf, bits: int, lut_dtype):
+    """Per-layer DNA-TEQ fit for scan-stacked weights [L, ...]: one
+    quantizer per layer (faithful to the paper's per-layer precision),
+    packed with leading L on every field so lax.scan slices cleanly."""
+    def enc(x):
+        qp = eq.fit(x, bits)
+        codes = eq.encode(x, qp)
+        lut = eq.decode_table(qp, lut_dtype)
+        meta = jnp.stack([qp.alpha, qp.beta, qp.base,
+                          jnp.float32(bits)]).astype(jnp.float32)
+        return codes, lut, meta, eq.sqnr_db(x, qp)
+
+    codes, luts, metas, sqnrs = jax.vmap(enc)(leaf.astype(jnp.float32))
+    return ({"codes": codes, "lut": luts, "qmeta": metas},
+            float(jnp.mean(sqnrs)))
+
+
+def quantize_tree(
+    params,
+    bits: int = 7,
+    predicate: Callable = default_predicate,
+    lut_dtype=jnp.float32,
+    axes=None,
+):
+    """Replace eligible weight leaves with qtensor dicts (fit per tensor;
+    per *layer* for scan-stacked weights when ``axes`` marks a leading
+    "layers" dim).  Returns (new_params, report{path: (bits, sqnr_db)}).
+    """
+    report = {}
+    axes_leaves = {}
+    if axes is not None:
+        flat = jax.tree_util.tree_flatten_with_path(
+            axes, is_leaf=lambda x: isinstance(x, tuple))[0]
+        for path, ax in flat:
+            axes_leaves[_path_str(path)] = ax
+
+    def visit(path, leaf):
+        key = _path_str(path)
+        if eq.is_qtensor(leaf) or not predicate(key, leaf):
+            return leaf
+        ax = axes_leaves.get(key)
+        if ax and len(ax) and ax[0] == "layers":
+            packed, sqnr = _quantize_stacked(leaf, bits, lut_dtype)
+            report[key] = (bits, sqnr)
+            return packed
+        codes, qp = eq.quantize(leaf.astype(jnp.float32), bits)
+        report[key] = (bits, float(eq.sqnr_db(leaf, qp)))
+        return eq.pack_qtensor(codes, qp, lut_dtype)
+
+    new = jax.tree_util.tree_map_with_path(visit, params)
+    return new, report
+
+
+def quantize_tree_mixed(
+    params,
+    min_sqnr_db: float = 22.0,
+    predicate: Callable = default_predicate,
+    lut_dtype=jnp.float32,
+    axes=None,
+):
+    """DNA-TEQ mixed-precision variant: per-tensor bitwidth search
+    (paper Table VI).  For scan-stacked weights the width is searched on
+    layer 0 and the per-layer fit applied at that width.  Returns
+    (new_params, report{path: (bits, sqnr)})."""
+    report = {}
+    axes_leaves = {}
+    if axes is not None:
+        flat = jax.tree_util.tree_flatten_with_path(
+            axes, is_leaf=lambda x: isinstance(x, tuple))[0]
+        for path, ax in flat:
+            axes_leaves[_path_str(path)] = ax
+
+    def visit(path, leaf):
+        key = _path_str(path)
+        if eq.is_qtensor(leaf) or not predicate(key, leaf):
+            return leaf
+        ax = axes_leaves.get(key)
+        if ax and len(ax) and ax[0] == "layers":
+            bits, _ = eq.search_bitwidth(
+                leaf[0].astype(jnp.float32), min_sqnr_db)
+            packed, sqnr = _quantize_stacked(leaf, bits, lut_dtype)
+            report[key] = (bits, sqnr)
+            return packed
+        bits, qp = eq.search_bitwidth(leaf.astype(jnp.float32), min_sqnr_db)
+        codes = eq.encode(leaf.astype(jnp.float32), qp)
+        report[key] = (bits, float(eq.sqnr_db(leaf, qp)))
+        return eq.pack_qtensor(codes, qp, lut_dtype)
+
+    new = jax.tree_util.tree_map_with_path(visit, params)
+    return new, report
+
+
+def abstract_quantize(aparams, axes, bits: int = 7, lut_dtype=jnp.float32,
+                      predicate: Callable = default_predicate):
+    """Shape-only mirror of :func:`quantize_tree` for dry-run lowering:
+    eligible weight ShapeDtypeStructs become {codes: uint8, lut, qmeta}
+    struct dicts (per-layer tables for scan-stacked weights).  Returns
+    (abstract_qparams, qaxes) where qaxes extends the logical-axes tree.
+    """
+    flat_axes = {}
+    flat = jax.tree_util.tree_flatten_with_path(
+        axes, is_leaf=lambda x: isinstance(x, tuple))[0]
+    for path, ax in flat:
+        flat_axes[_path_str(path)] = ax
+
+    def visit(path, leaf):
+        key = path  # plain string tuple
+        if not predicate(key, leaf):
+            return leaf, flat_axes.get(key)
+        ax = flat_axes.get(key) or (None,) * len(leaf.shape)
+        stacked = len(ax) > 0 and ax[0] == "layers"
+        lead = (leaf.shape[0],) if stacked else ()
+        lead_ax = ("layers",) if stacked else ()
+        q = {
+            "codes": jax.ShapeDtypeStruct(leaf.shape, jnp.uint8),
+            "lut": jax.ShapeDtypeStruct(lead + (256,), lut_dtype),
+            "qmeta": jax.ShapeDtypeStruct(lead + (4,), jnp.float32),
+        }
+        qa = {
+            "codes": ax,
+            "lut": lead_ax + (None,),
+            "qmeta": lead_ax + (None,),
+        }
+        return q, qa
+
+    # recursive structural walk (preserves empty subtrees, e.g. the
+    # parameter-free non-parametric LayerNorm dicts of olmo)
+    def walk(node, path):
+        if isinstance(node, dict) and not (
+                jax.tree_util.all_leaves([node]) if node else False):
+            p_out, a_out = {}, {}
+            for k, v in node.items():
+                p_out[k], a_out[k] = walk(v, path + (k,))
+            return p_out, a_out
+        q, qa = visit(path, node)
+        if qa is None:
+            qa = flat_axes.get(path)
+        return q, qa
+
+    out_p, out_a = {}, {}
+    for k, v in aparams.items():
+        out_p[k], out_a[k] = walk(v, (k,))
+    return out_p, out_a
+
+
+def quantized_fraction(params) -> float:
+    """Fraction of parameter *bytes* now held as uint8 codes."""
+    q = tot = 0
+    for leaf in jax.tree_util.tree_leaves(
+        params, is_leaf=eq.is_qtensor
+    ):
+        if eq.is_qtensor(leaf):
+            n = int(leaf["codes"].size)
+            q += n
+            tot += n
+        elif hasattr(leaf, "size"):
+            tot += int(leaf.size)
+    return q / max(tot, 1)
+
+
+def avg_bits(report: dict) -> float:
+    """Average searched exponent bitwidth (compare Table VI 'Avg bit')."""
+    if not report:
+        return 0.0
+    return sum(b for b, _ in report.values()) / len(report)

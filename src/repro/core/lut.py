@@ -1,0 +1,130 @@
+"""Generic LUT machinery for Lama bulk operations (paper §III–IV).
+
+Lama computes an arbitrary two-operand function ``f(a, b)`` by pre-storing
+``f`` as a table: the scalar operand ``a`` selects the DRAM **row** (one
+ACT) and each vector element ``b_i`` independently selects a **column**
+within the open row (one internal column access per group of mats).
+
+On TPU the row/column split maps to: table rows along the leading axis
+(one row gathered/pinned per coalesced batch — the "open page"), column
+gathers vectorized across lanes.  These helpers are the pure-jnp oracle
+for the ``lama_bulk_op`` Pallas kernel and the input to the PIM command
+model in :mod:`repro.core.pim`.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def build_lut(
+    f: Callable[[jax.Array, jax.Array], jax.Array],
+    a_bits: int,
+    b_bits: int,
+    dtype=jnp.int32,
+) -> jax.Array:
+    """Materialize ``f`` over all (a, b) code pairs -> [2**a_bits, 2**b_bits].
+
+    Mirrors the paper's compute-subarray layout (Fig. 6): row index = a,
+    column index = b.  ``f`` receives integer operand values.
+    """
+    a = jnp.arange(2**a_bits, dtype=jnp.int32)[:, None]
+    b = jnp.arange(2**b_bits, dtype=jnp.int32)[None, :]
+    return f(a, b).astype(dtype)
+
+
+def mul_lut(bits: int, out_dtype=jnp.int32) -> jax.Array:
+    """Unsigned bulk-multiplication LUT (case study 1)."""
+    return build_lut(lambda a, b: a * b, bits, bits, out_dtype)
+
+
+def lut_apply(table: jax.Array, a_codes: jax.Array, b_codes: jax.Array) -> jax.Array:
+    """Elementwise ``f(a_i, b_i)`` via table gather (broadcasts a vs b)."""
+    return table[a_codes.astype(jnp.int32), b_codes.astype(jnp.int32)]
+
+
+def coalesced_apply(table: jax.Array, a_scalar: jax.Array, b_vec: jax.Array) -> jax.Array:
+    """One operand-coalesced batch: ``f(a, b_i)`` for all i.
+
+    The row gather happens once (the ACT analog); the column gather is
+    vectorized (the per-mat independent column select analog).
+    """
+    row = table[a_scalar.astype(jnp.int32)]          # LUT activation
+    return row[b_vec.astype(jnp.int32)]              # LUT retrievals
+
+
+class CoalescedPlan(NamedTuple):
+    """Static execution plan for a vector-matrix product done as
+    operand-coalesced scalar-vector batches (paper Fig. 2)."""
+
+    num_batches: int          # == len(v): one batch per scalar operand
+    batch_size: int           # == number of columns of M
+    rows_per_batch: int       # DRAM rows the vector operand spans
+    retrievals_per_batch: int # LUT retrieval (column-access) count
+
+
+def plan_vector_matrix(
+    vec_len: int,
+    out_len: int,
+    bits: int,
+    row_elems: int = 1024,   # HBM2: 1KB page holds 1024 8-bit padded elems
+    parallel_degree: int | None = None,
+) -> CoalescedPlan:
+    """Derive the coalesced-batch structure for ``v[K] @ M[K, N]``.
+
+    ``parallel_degree`` defaults to the paper's p(bits) (Table II).
+    """
+    p = parallel_degree if parallel_degree is not None else lama_parallelism(bits)
+    rows = max(1, -(-out_len // row_elems))
+    retrievals = -(-out_len // p)
+    return CoalescedPlan(vec_len, out_len, rows, retrievals)
+
+
+def lama_parallelism(bits: int) -> int:
+    """Degree of mat-level parallelism p per bank (paper Table II)."""
+    table = {4: 16, 5: 16, 6: 8, 7: 4, 8: 2}
+    if bits not in table:
+        raise ValueError(f"Lama MUL supports 4..8-bit operands, got {bits}")
+    return table[bits]
+
+
+def icas_per_retrieval(bits: int) -> int:
+    """Internal column accesses per LUT retrieval (paper Table II)."""
+    return 1 if bits == 4 else 2
+
+
+def masking_msbs(bits: int) -> int:
+    """MSBs of b consumed by the mask logic (0 = mask bypassed)."""
+    return {4: 0, 5: 0, 6: 1, 7: 2, 8: 3}[bits]
+
+
+def vector_matrix_via_lut(
+    v: jax.Array,          # [K] integer codes
+    m: jax.Array,          # [K, N] integer codes
+    bits: int,
+) -> jax.Array:
+    """Reference semantics of case study 1: v @ M computed as K coalesced
+    scalar-vector LUT multiplications + host-side accumulation.
+
+    Exact for integer operands (the LUT stores full-precision products).
+    """
+    table = mul_lut(bits, jnp.int32)
+
+    def one_batch(acc, vk_mk):
+        vk, mk = vk_mk
+        return acc + coalesced_apply(table, vk, mk), None
+
+    init = jnp.zeros((m.shape[1],), jnp.int32)
+    acc, _ = jax.lax.scan(one_batch, init, (v, m))
+    return acc
+
+
+def numpy_mul_lut(bits: int) -> np.ndarray:
+    """Host-side LUT (used by the PIM simulator for data-layout sizing)."""
+    a = np.arange(2**bits, dtype=np.int64)[:, None]
+    b = np.arange(2**bits, dtype=np.int64)[None, :]
+    return a * b

@@ -1,0 +1,12 @@
+"""Command-level PIM instrument: rebuilt in-house simulator of the paper
+(HBM2 timing/energy from Table III; Lama, pLUTo, SIMDRAM, CPU/TPU/GPU
+models; LamaAccel workload evaluation)."""
+
+from repro.core.pim.hbm import HBM2Config, CommandCounts, CostResult, DEFAULT  # noqa: F401
+from repro.core.pim.lama import lama_bulk_cost, lama_command_reduction_vs_pluto  # noqa: F401
+from repro.core.pim.pluto import pluto_bulk_cost  # noqa: F401
+from repro.core.pim.simdram import simdram_bulk_cost  # noqa: F401
+from repro.core.pim.devices import cpu_bulk_cost, EdgeTPUModel, A6000Model  # noqa: F401
+from repro.core.pim.area import lama_area_overhead  # noqa: F401
+from repro.core.pim.accel import fig12_table, fig13_table, calibrated_models  # noqa: F401
+from repro.core.pim.workloads import table_vi_workloads  # noqa: F401

@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the performance-critical compute hot-spots.
+
+* ``lut_dequant_matmul`` — the TPU-native Lama matmul: DNA-TEQ codes
+  decoded in-kernel (VMEM LUT gather or ALU exp), fused into an MXU
+  matmul.  The VMEM-resident decode table is the "open DRAM row".
+* ``lama_bulk_op``      — case study 1, faithful: operand-coalesced bulk
+  f(a, b) where the scalar prefetch selects the LUT *row block* (the ACT
+  analog) and the vector codes gather columns (the per-mat column select).
+* ``exp_histogram``     — the counting-subarray analog: signed occurrence
+  histograms of exponent values, vectorized as iota-compare + reduce.
+
+Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit'd
+wrapper with padding + interpret fallback), ref.py (pure-jnp oracle).
+Validated on CPU with interpret=True across shape/dtype sweeps.
+"""

@@ -1,0 +1,1 @@
+from repro.kernels.decode_gqa.ops import decode_gqa, decode_gqa_ref  # noqa: F401

@@ -1,0 +1,109 @@
+"""Decode-step GQA attention with in-kernel quantized-KV dequantization
+(flash-decoding over the cache; the serving hot-spot of §Perf Cell A).
+
+One new query token per sequence attends over a [S, n_kv, hd] cache that
+may be stored in float8_e4m3fn (or any narrow dtype): the cast to f32
+happens *inside* the kernel, after the HBM→VMEM DMA — so the bytes that
+actually cross HBM are the narrow ones.  This is the kernel-level
+guarantee that EXPERIMENTS.md §Perf A2 found XLA will not give you for
+free (it hoists dequantization above the data movement).
+
+Grid: (B, S/bs) — batch parallel, cache blocks "arbitrary" with the
+classic online-softmax (m, l, acc) VMEM carries; causal validity comes
+from the per-sequence length prefetch (lengths[b] <= S), so one compiled
+kernel serves ragged batches.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            *, block_s: int, num_kv: int, groups: int, out_dtype):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # [n_kv, g, hd]
+    k = k_ref[0].astype(jnp.float32)              # [bs, n_kv, hd]  (dequant!)
+    v = v_ref[0].astype(jnp.float32)
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    logit = jnp.einsum("ngh,snh->ngs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    pos = j * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_s), 2)
+    valid = pos < len_ref[b]
+    logit = jnp.where(valid, logit, -1e30)
+
+    m_prev = m_ref[...]                            # [n_kv, g]
+    m_new = jnp.maximum(m_prev, jnp.max(logit, axis=-1))
+    p = jnp.exp(logit - m_new[..., None])          # [n_kv, g, bs]
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "ngs,snh->ngh", p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[..., None]
+                    ).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_s", "out_dtype", "interpret"))
+def decode_gqa_kernel(
+    q: jax.Array,        # [B, n_kv, g, hd]
+    k_cache: jax.Array,  # [B, S, n_kv, hd]  (bf16 / f8e4m3fn / ...)
+    v_cache: jax.Array,  # [B, S, n_kv, hd]
+    lengths: jax.Array,  # [B] int32 — valid cache entries per sequence
+    *,
+    block_s: int = 512,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    b, n_kv, g, hd = q.shape
+    s = k_cache.shape[1]
+    assert s % block_s == 0, (s, block_s)
+    grid = (b, s // block_s)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,   # lengths
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_kv, g, hd), lambda i, j, L: (i, 0, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, hd), lambda i, j, L: (i, j, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, hd), lambda i, j, L: (i, j, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_kv, g, hd), lambda i, j, L: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, g), jnp.float32),        # running max
+            pltpu.VMEM((n_kv, g), jnp.float32),        # running denom
+            pltpu.VMEM((n_kv, g, hd), jnp.float32),    # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, num_kv=n_kv,
+                          groups=g, out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, hd), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), q, k_cache, v_cache)

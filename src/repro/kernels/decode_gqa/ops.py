@@ -1,0 +1,35 @@
+"""Public wrapper: dtype/shape handling + interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_gqa.decode_gqa import decode_gqa_kernel
+from repro.kernels.decode_gqa.ref import decode_gqa_ref
+
+
+def decode_gqa(q, k_cache, v_cache, lengths, *, block_s: int | None = None,
+               out_dtype=None, interpret: bool | None = None):
+    """Flash-decoding GQA with in-kernel KV dequantization.
+
+    q: [B, n_kv, g, hd]; caches [B, S, n_kv, hd] in bf16/f8/int8-like
+    dtypes; lengths [B].  Returns [B, n_kv, g, hd].
+    """
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    out_dtype = out_dtype or jnp.float32
+    s = k_cache.shape[1]
+    if block_s is None:
+        block_s = min(512, s)
+    if s % block_s != 0:
+        pad = block_s - s % block_s
+        widths = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, widths)
+        v_cache = jnp.pad(v_cache, widths)
+    return decode_gqa_kernel(q, k_cache, v_cache, lengths,
+                             block_s=block_s, out_dtype=out_dtype,
+                             interpret=interpret)
+
+
+__all__ = ["decode_gqa", "decode_gqa_ref"]

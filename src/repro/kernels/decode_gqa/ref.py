@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for decode-step GQA over a (possibly narrow-dtype)
+KV cache."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_gqa_ref(q, k_cache, v_cache, lengths, out_dtype=jnp.float32):
+    """q: [B, n_kv, g, hd]; caches [B, S, n_kv, hd]; lengths [B]."""
+    qf = q.astype(jnp.float32)
+    kf = k_cache.astype(jnp.float32)
+    vf = v_cache.astype(jnp.float32)
+    hd = q.shape[-1]
+    logit = jnp.einsum("bngh,bsnh->bngs", qf, kf) / math.sqrt(hd)
+    s = kf.shape[1]
+    valid = jnp.arange(s)[None, :] < lengths[:, None]          # [B, S]
+    logit = jnp.where(valid[:, None, None, :], logit, -1e30)
+    p = jax.nn.softmax(logit, axis=-1)
+    return jnp.einsum("bngs,bsnh->bngh", p, vf).astype(out_dtype)

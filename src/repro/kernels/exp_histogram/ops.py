@@ -1,0 +1,37 @@
+"""Public wrapper: padding + interpret fallback + Eq.1 term-1 helper."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.exponential_quant import ExpQuantParams, split_code
+from repro.kernels.exp_histogram.exp_histogram import exp_histogram_kernel
+from repro.kernels.exp_histogram.ref import exp_histogram_ref
+
+
+def exp_histogram(vals, signs, num_bins: int,
+                  interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    g, m = vals.shape
+    bg = 8 if g % 8 == 0 else 1
+    bm = 512 if m % 512 == 0 else m
+    return exp_histogram_kernel(vals, signs, num_bins=num_bins, bg=bg,
+                                bm=bm, interpret=interpret)
+
+
+def term1_counts(codes_a: jax.Array, pa: ExpQuantParams,
+                 codes_w: jax.Array, pw: ExpQuantParams,
+                 interpret: bool | None = None):
+    """Paper Eq.1 term-1 counters for a batch of dot products: signed
+    occurrence counts of e_A + e_W.  codes: [G, M] aligned pairs."""
+    sa, ea = split_code(codes_a, pa)
+    sw, ew = split_code(codes_w, pw)
+    vals = (ea - pa.e_min) + (ew - pw.e_min)
+    bins = (pa.e_max - pa.e_min) + (pw.e_max - pw.e_min) + 1
+    signs = (sa * sw).astype(jnp.float32)
+    return exp_histogram(vals, signs, bins, interpret=interpret)
+
+
+__all__ = ["exp_histogram", "exp_histogram_ref", "term1_counts"]

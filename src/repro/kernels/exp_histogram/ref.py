@@ -1,0 +1,13 @@
+"""Pure-jnp oracle (same semantics as core.exponent_dotprod.signed_histogram
+with lo=0)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def exp_histogram_ref(vals: jax.Array, signs: jax.Array,
+                      num_bins: int) -> jax.Array:
+    onehot = jax.nn.one_hot(vals, num_bins, dtype=jnp.float32)
+    return jnp.einsum("gm,gme->ge", signs.astype(jnp.float32), onehot)

@@ -1,0 +1,5 @@
+from repro.kernels.lama_bulk_op.ops import (  # noqa: F401
+    lama_bulk_op,
+    lama_bulk_op_ref,
+    lama_vector_matrix,
+)

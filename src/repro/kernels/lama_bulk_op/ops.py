@@ -1,0 +1,29 @@
+"""Public wrapper for the bulk LUT op, plus the vector-matrix
+decomposition of Fig. 2 built on it."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.lut import mul_lut
+from repro.kernels.lama_bulk_op.lama_bulk_op import lama_bulk_op_kernel
+from repro.kernels.lama_bulk_op.ref import lama_bulk_op_ref
+
+
+def lama_bulk_op(a_codes, b_codes, table, interpret: bool | None = None):
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    return lama_bulk_op_kernel(a_codes, b_codes, table, interpret=interpret)
+
+
+def lama_vector_matrix(v: jax.Array, m: jax.Array, bits: int,
+                       interpret: bool | None = None) -> jax.Array:
+    """v[K] @ M[K, N] via K operand-coalesced LUT batches + accumulation
+    (paper Fig. 2).  Exact for integer operands."""
+    table = mul_lut(bits, jnp.int32)
+    prods = lama_bulk_op(v, m, table, interpret=interpret)   # [K, N]
+    return jnp.sum(prods, axis=0)
+
+
+__all__ = ["lama_bulk_op", "lama_bulk_op_ref", "lama_vector_matrix"]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle: repro.core.lut semantics."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lama_bulk_op_ref(a_codes: jax.Array, b_codes: jax.Array,
+                     table: jax.Array) -> jax.Array:
+    return table[a_codes.astype(jnp.int32)[:, None],
+                 b_codes.astype(jnp.int32)]

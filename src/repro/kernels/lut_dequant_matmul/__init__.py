@@ -1,0 +1,3 @@
+from repro.kernels.lut_dequant_matmul import ops  # noqa: F401
+from repro.kernels.lut_dequant_matmul.ops import lut_dequant_matmul  # noqa: F401
+from repro.kernels.lut_dequant_matmul.ref import lut_dequant_matmul_ref  # noqa: F401

@@ -1,0 +1,107 @@
+"""Fused LUT-dequantize + matmul Pallas TPU kernel (the Lama perf path).
+
+``y[M, N] = x[M, K] @ decode(codes[K, N])`` where ``decode`` maps uint8
+DNA-TEQ codes through a 256-entry table.  The decode table lives in VMEM
+for the whole kernel — the TPU analog of Lama's "open row": one
+activation (table load) serves every tile of the operand-coalesced batch
+(DESIGN.md §2).  Weights cross HBM as 1 byte/param; the bf16 tensor
+never exists in HBM.
+
+Two decode modes:
+* ``gather`` — faithful LUT semantics: ``table[code]`` VMEM gather.
+* ``alu``    — exploits DNA-TEQ's closed form
+  ``sign * (alpha * base**e + beta)``: on TPU's vector unit an exp is
+  cheaper than a serialized 8-bit gather, so the "LUT" collapses into
+  arithmetic.  Bit-identical up to float rounding (tested).
+
+Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary"); fp32 VMEM scratch
+accumulator, flushed to the output tile on the last K step.  MXU dims
+(bm, bk, bn) default to 128-multiples.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _decode_gather(lut_row: jax.Array, codes: jax.Array) -> jax.Array:
+    return jnp.take(lut_row, codes.astype(jnp.int32), axis=0)
+
+
+def _decode_alu(qmeta: jax.Array, codes: jax.Array) -> jax.Array:
+    alpha, beta, base, bits = qmeta[0], qmeta[1], qmeta[2], qmeta[3]
+    e_min = -jnp.exp2(bits - 1.0)
+    c = codes.astype(jnp.int32)
+    sign = 1.0 - 2.0 * (c >> 7).astype(jnp.float32)
+    e = (c & 0x7F).astype(jnp.float32) + e_min
+    mag = alpha * jnp.exp(e * jnp.log(base)) + beta
+    return sign * mag
+
+
+def _kernel(x_ref, codes_ref, lut_ref, qmeta_ref, o_ref, acc_ref,
+            *, decode_mode: str, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    codes = codes_ref[...]                        # [bk, bn] uint8
+    if decode_mode == "gather":
+        w = _decode_gather(lut_ref[0, :], codes)  # [bk, bn] f32
+    else:
+        w = _decode_alu(qmeta_ref[0, :], codes)
+    x = x_ref[...].astype(jnp.float32)            # [bm, bk]
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "decode_mode", "out_dtype",
+                     "interpret"),
+)
+def lut_dequant_matmul_kernel(
+    x: jax.Array,        # [M, K] float
+    codes: jax.Array,    # [K, N] uint8
+    lut: jax.Array,      # [256] float32 decode table
+    qmeta: jax.Array,    # [4] float32 (alpha, beta, base, bits)
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    decode_mode: str = "gather",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    k2, n = codes.shape
+    assert k == k2, (x.shape, codes.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, decode_mode=decode_mode,
+                          out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((1, 256), lambda i, j, kk: (0, 0)),   # resident LUT
+            pl.BlockSpec((1, 4), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, codes.astype(jnp.uint8), lut.reshape(1, 256).astype(jnp.float32),
+      qmeta.reshape(1, 4).astype(jnp.float32))

@@ -1,0 +1,50 @@
+"""Jit'd public wrapper: padding, tiling choice, interpret fallback."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.lut_dequant_matmul.lut_dequant_matmul import (
+    lut_dequant_matmul_kernel,
+)
+from repro.kernels.lut_dequant_matmul.ref import lut_dequant_matmul_ref
+
+
+def _pad_to(x, mult, axis):
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+def lut_dequant_matmul(
+    x: jax.Array,          # [M, K]
+    codes: jax.Array,      # [K, N] uint8
+    lut: jax.Array,        # [256]
+    qmeta: jax.Array | None = None,
+    *,
+    decode_mode: str = "gather",
+    out_dtype=None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused dequant+matmul; pads to 128 tiles, slices back."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    out_dtype = out_dtype or x.dtype
+    m, k = x.shape
+    _, n = codes.shape
+    bm = 128 if m >= 128 else max(8, 1 << (m - 1).bit_length())
+    xk = _pad_to(_pad_to(x, bm, 0), 128, 1)
+    ck = _pad_to(_pad_to(codes, 128, 0), 128, 1)
+    if qmeta is None:
+        qmeta = jnp.zeros((4,), jnp.float32)
+    out = lut_dequant_matmul_kernel(
+        xk, ck, lut, qmeta, bm=bm, decode_mode=decode_mode,
+        out_dtype=jnp.float32, interpret=interpret)
+    return out[:m, :n].astype(out_dtype)
+
+
+__all__ = ["lut_dequant_matmul", "lut_dequant_matmul_ref"]

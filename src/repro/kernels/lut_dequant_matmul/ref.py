@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the fused LUT-dequant matmul."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lut_dequant_matmul_ref(
+    x: jax.Array, codes: jax.Array, lut: jax.Array, qmeta=None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    w = lut.astype(jnp.float32)[codes.astype(jnp.int32)]
+    return jnp.matmul(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
+    ).astype(out_dtype)

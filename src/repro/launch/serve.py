@@ -1,0 +1,56 @@
+"""Serving launcher: batched requests against a (optionally
+Lama-quantized) model.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tiny \
+        --requests 16 --quant 7
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.runtime.server import InferenceServer, Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--new-tokens", type=int, default=16)
+    ap.add_argument("--quant", type=int, default=None,
+                    help="DNA-TEQ exponent bits (e.g. 7)")
+    ap.add_argument("--max-len", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, tiny=args.tiny)
+    server = InferenceServer(cfg, quant_bits=args.quant,
+                             max_len=args.max_len)
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(i, rng.integers(0, cfg.vocab_size,
+                                args.prompt_len).astype(np.int32),
+                max_new_tokens=args.new_tokens)
+        for i in range(args.requests)
+    ]
+    t0 = time.time()
+    outs = server.generate(reqs)
+    dt = time.time() - t0
+    tokens = sum(len(c.tokens) for c in outs)
+    print(f"served {len(outs)} requests, {tokens} tokens in {dt:.2f}s "
+          f"({tokens/dt:.1f} tok/s)")
+    if server.quant_report:
+        import statistics as st
+        bits = [b for b, _ in server.quant_report.values()]
+        sqnr = [s for _, s in server.quant_report.values()]
+        print(f"quantized {len(bits)} tensors, avg bits {st.mean(bits):.2f}, "
+              f"avg SQNR {st.mean(sqnr):.1f} dB")
+
+
+if __name__ == "__main__":
+    main()

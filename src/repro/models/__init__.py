@@ -1,0 +1,5 @@
+"""Model zoo: pure-functional JAX implementations of the ten assigned
+architectures (decoder LMs, MoE, hybrid RG-LRU, RWKV-6, enc-dec, VLM),
+all Lama-quantizable via repro.core.lama_layers."""
+
+from repro.models.api import ModelAPI, get_model, input_specs, loss_fn, synth_batch  # noqa: F401

@@ -1,0 +1,423 @@
+"""Shared model building blocks (pure functions + ParamSpec builders).
+
+Every matmul routes through :func:`repro.core.lama_layers.dense` /
+``dense_general`` so any weight can transparently be a Lama/DNA-TEQ code
+tensor (the paper's technique as a first-class feature).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lama_layers as ll
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+
+Params = Any
+
+
+# ------------------------------------------------------------- norms --
+
+def constrain_act(x: jax.Array) -> jax.Array:
+    """Pin activation sharding: batch over the FSDP axes, feature dims
+    replicated.  Without this XLA SPMD may propagate batch-replicated
+    layouts from parameter shardings (observed: 16x redundant compute on
+    the data axis).  Under CONTEXT_PARALLEL the sequence dim additionally
+    shards over "model".  No-op outside a mesh context."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return x
+        fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        if not fsdp or x.ndim < 2:
+            return x
+        if x.shape[0] % math.prod(mesh.shape[a] for a in fsdp) != 0:
+            return x
+        rest = [None] * (x.ndim - 1)
+        if (CONTEXT_PARALLEL and x.ndim >= 3 and "model" in mesh.axis_names
+                and x.shape[1] % mesh.shape["model"] == 0):
+            rest[0] = "model"   # sequence dim
+        spec = jax.sharding.PartitionSpec(fsdp, *rest)
+        return jax.lax.with_sharding_constraint(x, spec)
+    except Exception:
+        return x
+
+
+def norm_specs(cfg: ModelConfig, kind: str | None = None) -> dict:
+    kind = kind or cfg.norm
+    d = cfg.d_model
+    if kind == "rmsnorm":
+        return {"scale": ParamSpec((d,), ("embed",), "ones")}
+    if kind == "layernorm":
+        return {"scale": ParamSpec((d,), ("embed",), "ones"),
+                "bias": ParamSpec((d,), ("embed",), "zeros")}
+    if kind == "nonparam_ln":   # OLMo: non-parametric LayerNorm
+        return {}
+    raise ValueError(kind)
+
+
+def apply_norm(p: Params, x: jax.Array, cfg: ModelConfig,
+               kind: str | None = None, eps: float = 1e-6) -> jax.Array:
+    kind = kind or cfg.norm
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps)
+        if kind == "layernorm":
+            out = out * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def head_norm_specs(cfg: ModelConfig) -> dict:
+    """Per-head-dim RMS norm used by qk_norm (Qwen3-style)."""
+    return {"scale": ParamSpec((cfg.resolved_head_dim,), (None,), "ones")}
+
+
+def apply_head_rms(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+# -------------------------------------------------------------- rope --
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [..., seq, heads, head_dim]; positions: [..., seq]."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.arange(half, dtype=jnp.float32) / half
+    inv = theta ** (-freq)                                # [half]
+    ang = positions.astype(jnp.float32)[..., None] * inv   # [..., seq, half]
+    cos = jnp.cos(ang)[..., None, :]                       # [..., seq, 1, half]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------- attention --
+
+def attention_specs(cfg: ModelConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    s = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head"), "scaled"),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head"), "scaled"),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "head"), "scaled"),
+        "wo": ParamSpec((h, hd, d), ("heads", "head", "embed"), "scaled",
+                        fan_in_axis=0),
+    }
+    if cfg.qk_norm:
+        s["q_norm"] = head_norm_specs(cfg)
+        s["k_norm"] = head_norm_specs(cfg)
+    return s
+
+
+def _mask_bias(mask: jax.Array, dtype) -> jax.Array:
+    return jnp.where(mask, 0.0, -1e30).astype(jnp.float32)
+
+
+def causal_mask(q_len: int, kv_len: int, q_offset) -> jax.Array:
+    """[q_len, kv_len] bool; q position i attends kv j <= i + offset."""
+    qp = jnp.arange(q_len) + q_offset
+    kp = jnp.arange(kv_len)
+    return kp[None, :] <= qp[:, None]
+
+
+def local_mask(q_len: int, kv_len: int, q_offset, window: int) -> jax.Array:
+    qp = jnp.arange(q_len) + q_offset
+    kp = jnp.arange(kv_len)
+    causal = kp[None, :] <= qp[:, None]
+    near = kp[None, :] > qp[:, None] - window
+    return causal & near
+
+
+def prefix_lm_mask(q_len: int, kv_len: int, q_offset, prefix: int) -> jax.Array:
+    """PaliGemma-style: full attention within the image/text prefix,
+    causal afterwards."""
+    base = causal_mask(q_len, kv_len, q_offset)
+    qp = jnp.arange(q_len) + q_offset
+    kp = jnp.arange(kv_len)
+    in_prefix = (qp[:, None] < prefix) & (kp[None, :] < prefix)
+    return base | in_prefix
+
+
+# Above this many score elements, attention switches to the chunked
+# online-softmax (flash) path so scores never materialize.
+FLASH_THRESHOLD = 32 * 1024 * 1024
+FLASH_Q_CHUNK = 1024
+FLASH_K_CHUNK = 1024
+# Unrolled chunk loops (larger chunks, Python loops instead of lax.scan):
+# used by the dry-run cost extraction, where scan bodies are counted once.
+FLASH_UNROLL = False
+
+# §Perf iteration B (EXPERIMENTS.md): context-parallel training.  When
+# enabled, activations shard their *sequence* dim over the model axis
+# (constrain_act), flash attention keeps q un-chunked so the SPMD
+# partitioner distributes score compute along the sharded seq dim, and
+# the sharding rules drop tensor-parallel weight sharding in favour of
+# 2-D FSDP.  Fixes the pathological partial-sum score all-reduces of
+# archs whose head counts don't divide the model axis (qwen3-14b: 40).
+CONTEXT_PARALLEL = False
+
+
+def set_flash_unroll(enable: bool) -> None:
+    global FLASH_UNROLL
+    FLASH_UNROLL = enable
+
+
+def set_context_parallel(enable: bool) -> None:
+    global CONTEXT_PARALLEL
+    CONTEXT_PARALLEL = enable
+
+
+def _block_mask(kind: str, arg, qp: jax.Array, kp: jax.Array) -> jax.Array:
+    """[Qc, Kc] bool from absolute positions for one (q-chunk, k-chunk)."""
+    if kind == "full":
+        return jnp.ones((qp.shape[0], kp.shape[0]), bool)
+    if kind == "causal":
+        return kp[None, :] <= qp[:, None]
+    if kind == "local":
+        return (kp[None, :] <= qp[:, None]) & (kp[None, :] > qp[:, None] - arg)
+    if kind == "prefix":
+        causal = kp[None, :] <= qp[:, None]
+        both = (qp[:, None] < arg) & (kp[None, :] < arg)
+        return causal | both
+    raise ValueError(kind)
+
+
+def _materialize_mask(kind: str, arg, q_len: int, kv_len: int, q_offset):
+    return _block_mask(kind, arg, jnp.arange(q_len) + q_offset,
+                       jnp.arange(kv_len))
+
+
+def _attend_dense(q, k, v, mask, dt):
+    """q: [B,S,nkv,G,hd]; k/v: [B,T,nkv,hd]; mask: [S,T] or [B,S,T] bool."""
+    hd = q.shape[-1]
+    logits = jnp.einsum("bsngh,btnh->bnsgt", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if mask.ndim == 2:
+        bias = _mask_bias(mask, jnp.float32)[None, None, :, None, :]
+    else:
+        bias = _mask_bias(mask, jnp.float32)[:, None, :, None, :]
+    probs = jax.nn.softmax(logits + bias, axis=-1).astype(dt)
+    return jnp.einsum("bnsgt,btnh->bsngh", probs, v)
+
+
+def _attend_flash(q, k, v, kind: str, arg, q_offset, dt,
+                  q_chunk=FLASH_Q_CHUNK, k_chunk=FLASH_K_CHUNK):
+    """Chunked online-softmax attention (FlashAttention recurrence in
+    pure JAX): scan over query chunks, inner scan over KV chunks with
+    running (max, denom, acc).  Never materializes [S, T] scores —
+    the pure-jnp mirror of kernels/flash_gqa."""
+    b, s, n, g, hd = q.shape
+    t = k.shape[1]
+    if FLASH_UNROLL:   # few large chunks, Python loops (countable HLO)
+        q_chunk = max(s // 4, min(s, 1024))
+        k_chunk = max(t // 4, min(t, 1024))
+    if CONTEXT_PARALLEL:
+        # keep q un-chunked: the SPMD partitioner distributes the scores
+        # along q's (model-)sharded sequence dim; only KV is streamed.
+        q_chunk = s
+    q_chunk = min(q_chunk, s)
+    k_chunk = min(k_chunk, t)
+    nq = -(-s // q_chunk)
+    nk = -(-t // k_chunk)
+    pad_q = nq * q_chunk - s
+    pad_k = nk * k_chunk - t
+    # §Perf B2: operands stay bf16 (f32 softmax stats / MXU accumulation)
+    # so cross-shard K/V movement and their grad reductions are 2 B/el.
+    op_dt = dt if dt == jnp.bfloat16 else jnp.float32
+    qf = jnp.pad(q.astype(op_dt), ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+    kf = jnp.pad(k.astype(op_dt), ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    vf = jnp.pad(v.astype(op_dt), ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kp_valid = jnp.arange(nk * k_chunk) < t
+
+    qs = jnp.moveaxis(qf.reshape(b, nq, q_chunk, n, g, hd), 1, 0)
+    ks = jnp.moveaxis(kf.reshape(b, nk, k_chunk, n, hd), 1, 0)
+    vs = jnp.moveaxis(vf.reshape(b, nk, k_chunk, n, hd), 1, 0)
+    kvalid = kp_valid.reshape(nk, k_chunk)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_step(_, qi_qc):
+        qi, qc = qi_qc
+        qpos = q_offset + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_step(carry, kj_kc_vc_valid):
+            m, l, acc = carry
+            kj, kc, vc, valid = kj_kc_vc_valid
+            kpos = kj * k_chunk + jnp.arange(k_chunk)
+            logit = jnp.einsum("bsngh,btnh->bnsgt", qc, kc,
+                               preferred_element_type=jnp.float32) * scale
+            mask = _block_mask(kind, arg, qpos, kpos) & valid[None, :]
+            logit = jnp.where(mask[None, None, :, None, :], logit, -1e30)
+            m_new = jnp.maximum(m, jnp.max(logit, axis=-1))
+            p = jnp.exp(logit - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bnsgt,btnh->bnsgh", p.astype(vc.dtype), vc,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, n, q_chunk, g), -1e30, jnp.float32)
+        l0 = jnp.zeros((b, n, q_chunk, g), jnp.float32)
+        a0 = jnp.zeros((b, n, q_chunk, g, hd), jnp.float32)
+        if FLASH_UNROLL:
+            carry = (m0, l0, a0)
+            for kj in range(nk):
+                carry, _ = kv_step(
+                    carry, (jnp.asarray(kj), ks[kj], vs[kj], kvalid[kj]))
+            m, l, acc = carry
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0),
+                (jnp.arange(nk), ks, vs, kvalid))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]        # [b,n,qc,g,hd]
+        return None, jnp.moveaxis(out, 2, 1)                # [b,qc,n,g,hd]
+
+    if FLASH_UNROLL:
+        chunks = [q_step(None, (jnp.asarray(qi), qs[qi]))[1]
+                  for qi in range(nq)]
+        outs = jnp.stack(chunks)
+    else:
+        _, outs = jax.lax.scan(q_step, None, (jnp.arange(nq), qs))
+    out = jnp.moveaxis(outs, 0, 1).reshape(b, nq * q_chunk, n, g, hd)
+    return out[:, :s].astype(dt)
+
+
+def mha(
+    p: Params,
+    x: jax.Array,                      # [B, S, D]
+    cfg: ModelConfig,
+    positions: jax.Array,              # [B, S] absolute positions
+    mask,                              # bool array OR (kind, arg) descriptor
+    kv: tuple[jax.Array, jax.Array] | None = None,   # external K,V ([B,T,nkv,hd])
+    use_rope: bool = True,
+    q_offset=0,
+) -> jax.Array:
+    """Grouped-query attention; ``kv`` overrides self-derived keys/values
+    (decode-with-cache and cross-attention paths).  ``mask`` is either a
+    small bool array (decode) or a (kind, arg) descriptor — descriptors
+    route large shapes through the flash path."""
+    dt = x.dtype
+    q = ll.dense_general(x, p["wq"], "bsd,dnh->bsnh")
+    if kv is None:
+        k = ll.dense_general(x, p["wk"], "bsd,dnh->bsnh")
+        v = ll.dense_general(x, p["wv"], "bsd,dnh->bsnh")
+    else:
+        k, v = kv
+    if cfg.qk_norm:
+        q = apply_head_rms(p["q_norm"], q)
+        if kv is None:
+            k = apply_head_rms(p["k_norm"], k)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+        if kv is None:
+            k = rope(k, positions, cfg.rope_theta)
+
+    groups = cfg.num_heads // cfg.num_kv_heads
+    b, s, h, hd = q.shape
+    t = k.shape[1]
+    qg = q.reshape(b, s, cfg.num_kv_heads, groups, hd)
+
+    if isinstance(mask, tuple):
+        kind, arg = (mask[0], mask[1] if len(mask) > 1 else None)
+        score_elems = b * h * s * t
+        if score_elems > FLASH_THRESHOLD:
+            out = _attend_flash(qg, k, v, kind, arg, q_offset, dt)
+        else:
+            out = _attend_dense(qg, k, v,
+                                _materialize_mask(kind, arg, s, t, q_offset), dt)
+    else:
+        out = _attend_dense(qg, k, v, mask, dt)
+    out = out.reshape(b, s, h, hd)
+    return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
+
+
+def self_kv(p: Params, x: jax.Array, cfg: ModelConfig,
+            positions: jax.Array, use_rope: bool = True):
+    """Project K,V for cache writes (decode path)."""
+    k = ll.dense_general(x, p["wk"], "bsd,dnh->bsnh")
+    v = ll.dense_general(x, p["wv"], "bsd,dnh->bsnh")
+    if cfg.qk_norm:
+        k = apply_head_rms(p["k_norm"], k)
+    if use_rope:
+        k = rope(k, positions, cfg.rope_theta)
+    return k, v
+
+
+# --------------------------------------------------------------- mlp --
+
+def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    s = {"w_down": ParamSpec((f, d), ("mlp", "embed"), "scaled", fan_in_axis=0)}
+    if cfg.gated_mlp:
+        s["w_gate"] = ParamSpec((d, f), ("embed", "mlp"), "scaled")
+        s["w_up"] = ParamSpec((d, f), ("embed", "mlp"), "scaled")
+    else:
+        s["w_up"] = ParamSpec((d, f), ("embed", "mlp"), "scaled")
+    return s
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "relu":
+        return jax.nn.relu(x)
+    raise ValueError(kind)
+
+
+def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.gated_mlp:
+        g = _act(ll.dense(x, p["w_gate"]), cfg.activation)
+        u = ll.dense(x, p["w_up"])
+        return ll.dense(g * u, p["w_down"])
+    return ll.dense(_act(ll.dense(x, p["w_up"]), cfg.activation), p["w_down"])
+
+
+# -------------------------------------------------------- embeddings --
+
+def embed_specs(cfg: ModelConfig) -> dict:
+    # modest init scale keeps tied-unembedding logits O(1) at init
+    s = {"tokens": ParamSpec((cfg.vocab_size, cfg.d_model),
+                             ("vocab", "embed"), "embed", scale=0.05)}
+    return s
+
+
+def embed_tokens(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    table = ll.materialize(p["tokens"], jnp.dtype(cfg.compute_dtype))
+    return table[tokens]
+
+
+def unembed_specs(cfg: ModelConfig) -> dict:
+    if cfg.tie_embeddings:
+        return {}
+    return {"out": ParamSpec((cfg.d_model, cfg.vocab_size),
+                             ("embed", "vocab"), "scaled")}
+
+
+def logits_fn(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        table = ll.materialize(params["embed"]["tokens"],
+                               jnp.dtype(cfg.compute_dtype))
+        out = jnp.einsum("bsd,vd->bsv", x, table,
+                         preferred_element_type=jnp.float32)
+    else:
+        out = ll.dense(x, params["unembed"]["out"], dtype=x.dtype)
+        out = out.astype(jnp.float32)
+    if cfg.logit_softcap:
+        out = cfg.logit_softcap * jnp.tanh(out / cfg.logit_softcap)
+    return out.astype(jnp.float32)

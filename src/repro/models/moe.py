@@ -1,0 +1,174 @@
+"""Mixture-of-Experts layers (llama4-scout: 16e top-1; grok-1: 8e top-2).
+
+Two implementations, selectable via ``cfg.moe_impl``:
+
+* ``routed`` — production path: top-k routing with sort-based,
+  capacity-dropped dispatch (GShard capacity discipline, MegaBlocks-style
+  sorted grouping, no [T,E,C] one-hot blow-up).  Expert FFNs run as
+  grouped einsums over the ``experts`` axis, which shards as EP on the
+  mesh "model" axis when divisible.
+* ``dense_mixture`` — naive oracle: every expert computes every token,
+  mixed by router weights.  E/k x more FLOPs; used as the correctness
+  reference and as the §Perf baseline for the MoE hillclimb cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lama_layers as ll
+from repro.configs.base import ModelConfig
+from repro.models.params import ParamSpec
+
+
+def moe_specs(cfg: ModelConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": ParamSpec((d, e), ("embed", "experts"), "scaled"),
+        "w_gate": ParamSpec((e, d, f), ("experts", "embed", "mlp"), "scaled",
+                            fan_in_axis=1),
+        "w_up": ParamSpec((e, d, f), ("experts", "embed", "mlp"), "scaled",
+                          fan_in_axis=1),
+        "w_down": ParamSpec((e, f, d), ("experts", "mlp", "embed"), "scaled",
+                            fan_in_axis=1),
+    }
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    cap = int(tokens * cfg.experts_per_token * cfg.capacity_factor
+              / cfg.num_experts)
+    return max(128, -(-cap // 128) * 128)  # pad to a lane-friendly multiple
+
+
+def _router(p, xf: jax.Array, cfg: ModelConfig):
+    logits = ll.dense(xf, p["router"], dtype=jnp.float32)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, cfg.experts_per_token)
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+    # load-balancing auxiliary loss (Switch/GShard)
+    density = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], cfg.num_experts, dtype=jnp.float32), 0)
+    mean_probs = jnp.mean(probs, axis=0)
+    aux = cfg.num_experts * jnp.sum(density * mean_probs)
+    return probs, top_w, top_e, aux
+
+
+def _expert_ffn(p, buf: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """buf: [E, C, D] -> [E, C, D] through each expert's gated MLP."""
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    wg = ll.materialize(p["w_gate"], buf.dtype)
+    wu = ll.materialize(p["w_up"], buf.dtype)
+    wd = ll.materialize(p["w_down"], buf.dtype)
+    g = jnp.einsum("ecd,edf->ecf", buf, wg, preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, wu, preferred_element_type=jnp.float32)
+    h = (act(g) * u).astype(buf.dtype)
+    return jnp.einsum("ecf,efd->ecd", h, wd,
+                      preferred_element_type=jnp.float32).astype(buf.dtype)
+
+
+def _constrain(x, *spec):
+    """with_sharding_constraint against the ambient mesh (no-op outside).
+    'fsdp' in the spec expands to the (pod, data) axes present."""
+    import math as _math
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or mesh.empty:
+            return x
+        fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        out = []
+        for dim, part in enumerate(spec):
+            if part == "fsdp":
+                part = fsdp if fsdp else None
+            if part is not None:
+                axes = part if isinstance(part, tuple) else (part,)
+                if any(a not in mesh.axis_names for a in axes):
+                    part = None
+                elif x.shape[dim] % _math.prod(
+                        mesh.shape[a] for a in axes) != 0:
+                    part = None
+            out.append(part)
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.PartitionSpec(*out))
+    except Exception:
+        return x
+
+
+def apply_moe_routed(p, x: jax.Array, cfg: ModelConfig):
+    """Sort-based capacity-dropped dispatch.  x: [B, S, D].
+
+    §Perf C1 (EXPERIMENTS.md): dispatch buffers carry explicit sharding
+    constraints — token-indexed arrays over the FSDP axes, the expert
+    buffer over ("model" on E when divisible) x (FSDP on capacity) — so
+    SPMD lowers the scatter/gather as token all-to-alls instead of
+    replicating multi-GB buffers on every rank."""
+    b, s, d = x.shape
+    t = b * s
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    xf = _constrain(x.reshape(t, d), "fsdp", None)
+
+    _, top_w, top_e, aux = _router(p, xf, cfg)
+
+    flat_e = top_e.reshape(t * k)                      # expert of each slot
+    flat_w = top_w.reshape(t * k)
+    slot_tok = jnp.arange(t * k) // k                  # token of each slot
+
+    order = jnp.argsort(flat_e, stable=True)           # group slots by expert
+    sorted_e = flat_e[order]
+    counts = jnp.bincount(flat_e, length=e)
+    starts = jnp.cumsum(counts) - counts
+    within = jnp.arange(t * k) - starts[sorted_e]
+
+    cap = _capacity(cfg, t)
+    keep = within < cap
+    dest = jnp.where(keep, sorted_e * cap + within, e * cap)  # drop slot
+    src_tok = slot_tok[order]
+
+    buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(xf[src_tok])
+    buf = _constrain(buf[: e * cap].reshape(e, cap, d),
+                     "model", "fsdp", None)
+    out_buf = _constrain(_expert_ffn(p, buf, cfg), "model", "fsdp", None)
+    out_flat = jnp.concatenate(
+        [out_buf.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)], axis=0)
+
+    y_slots = out_flat[dest] * flat_w[order][:, None].astype(x.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[src_tok].add(y_slots)
+    return _constrain(y, "fsdp", None).reshape(b, s, d), aux
+
+
+def apply_moe_dense(p, x: jax.Array, cfg: ModelConfig):
+    """Oracle/baseline: all experts compute all tokens (scan over E)."""
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    probs, top_w, top_e, aux = _router(p, xf, cfg)
+    # sparse mixture weights [T, E] (zeros off the top-k support)
+    w = jnp.zeros_like(probs).at[
+        jnp.arange(t)[:, None], top_e
+    ].set(top_w)
+
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+
+    def body(carry, ew):
+        wg, wu, wd, we = ew
+        g = act(xf @ wg.astype(xf.dtype))
+        u = xf @ wu.astype(xf.dtype)
+        y = ((g * u) @ wd.astype(xf.dtype))
+        return carry + y * we[:, None].astype(xf.dtype), None
+
+    wg = ll.materialize(p["w_gate"], xf.dtype)
+    wu = ll.materialize(p["w_up"], xf.dtype)
+    wd = ll.materialize(p["w_down"], xf.dtype)
+    init = jnp.zeros((t, d), xf.dtype)
+    y, _ = jax.lax.scan(body, init, (wg, wu, wd, w.T.astype(jnp.float32)))
+    return y.reshape(b, s, d), aux
+
+
+def apply_moe(p, x: jax.Array, cfg: ModelConfig):
+    if cfg.moe_impl == "ep_a2a":
+        from repro.models.moe_ep import apply_moe_ep
+        return apply_moe_ep(p, x, cfg)
+    if cfg.moe_impl == "routed":
+        return apply_moe_routed(p, x, cfg)
+    return apply_moe_dense(p, x, cfg)

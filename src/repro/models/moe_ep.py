@@ -1,0 +1,155 @@
+"""Expert-parallel MoE dispatch via explicit shard_map all-to-alls
+(§Perf C4 — the production fix for the SPMD scatter replication that
+bounds Cell C in EXPERIMENTS.md).
+
+Layout (requires num_experts % model_axis == 0; exact for llama4's
+16e / 16-way mesh, one expert per model rank):
+
+* tokens live on their (pod, data[, model-under-CP]) shards;
+* expert weights shard over "model" on the expert axis;
+* each device locally sorts its tokens by destination expert rank, packs
+  a fixed-capacity [ranks, C, d] buffer, and a `jax.lax.all_to_all`
+  along "model" physically moves tokens to their experts — the ideal
+  T·d/ranks bytes per chip instead of replicated multi-GB scatters;
+* the expert FFN runs rank-locally; a second all_to_all returns results.
+
+Numerically equivalent to the capacity-dropped routed path up to which
+tokens are dropped when capacity binds (both drop deterministically by
+position order).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core import lama_layers as ll
+from repro.models.moe import _router
+
+
+def _mesh_info():
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+        return None
+    return mesh
+
+
+def ep_supported(cfg: ModelConfig) -> bool:
+    mesh = _mesh_info()
+    return (mesh is not None
+            and cfg.num_experts % mesh.shape["model"] == 0)
+
+
+def _local_moe(p, x_loc, cfg: ModelConfig, ranks: int, seq_sharded: bool):
+    """Per-device body under shard_map.  x_loc: [b_loc, s_loc, d]."""
+    bl, sl, d = x_loc.shape
+    t = bl * sl
+    k = cfg.experts_per_token
+    e = cfg.num_experts
+    e_loc = e // ranks
+    xf = x_loc.reshape(t, d)
+
+    _, top_w, top_e, aux = _router(p, xf, cfg)
+    aux = jax.lax.pmean(aux, "model")
+
+    flat_e = top_e.reshape(t * k)
+    flat_w = top_w.reshape(t * k)
+    slot_tok = jnp.arange(t * k) // k
+    dest_rank = flat_e // e_loc                       # owning model rank
+
+    order = jnp.argsort(dest_rank, stable=True)       # group by dest rank
+    sorted_rank = dest_rank[order]
+    counts = jnp.bincount(dest_rank, length=ranks)
+    starts = jnp.cumsum(counts) - counts
+    within = jnp.arange(t * k) - starts[sorted_rank]
+
+    cap = max(128, -(-int(t * k * cfg.capacity_factor / ranks) // 128) * 128)
+    keep = within < cap
+    send_slot = jnp.where(keep, sorted_rank * cap + within, ranks * cap)
+    src_tok = slot_tok[order]
+
+    # pack [ranks*cap(+1 drop row), d] then all-to-all along "model"
+    send = jnp.zeros((ranks * cap + 1, d), x_loc.dtype
+                     ).at[send_slot].set(xf[src_tok])
+    send_e = jnp.zeros((ranks * cap + 1,), jnp.int32
+                       ).at[send_slot].set(flat_e[order] % e_loc)
+    recv = jax.lax.all_to_all(
+        send[: ranks * cap].reshape(ranks, cap, d), "model",
+        split_axis=0, concat_axis=0, tiled=False)       # [ranks, cap, d]
+    recv_e = jax.lax.all_to_all(
+        send_e[: ranks * cap].reshape(ranks, cap), "model",
+        split_axis=0, concat_axis=0, tiled=False)       # [ranks, cap]
+
+    # rank-local expert FFN (E_loc experts; E_loc == 1 for llama4@16)
+    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
+    toks = recv.reshape(ranks * cap, d)
+    wg = ll.materialize(p["w_gate"], toks.dtype)     # [e_loc, d, f] local
+    wu = ll.materialize(p["w_up"], toks.dtype)
+    wd = ll.materialize(p["w_down"], toks.dtype)
+    if e_loc == 1:
+        h = act(toks @ wg[0]) * (toks @ wu[0])
+        out_toks = h @ wd[0]
+    else:
+        onehot = jax.nn.one_hot(recv_e.reshape(-1), e_loc, dtype=toks.dtype)
+        g = jnp.einsum("td,edf,te->tf", toks, wg, onehot)
+        u = jnp.einsum("td,edf,te->tf", toks, wu, onehot)
+        out_toks = jnp.einsum("tf,efd,te->td", act(g) * u, wd, onehot)
+
+    back = jax.lax.all_to_all(
+        out_toks.reshape(ranks, cap, d), "model",
+        split_axis=0, concat_axis=0, tiled=False).reshape(ranks * cap, d)
+    back = jnp.concatenate([back, jnp.zeros((1, d), x_loc.dtype)], axis=0)
+
+    y_slots = back[send_slot] * flat_w[order][:, None].astype(x_loc.dtype)
+    y = jnp.zeros((t, d), x_loc.dtype).at[src_tok].add(y_slots)
+    return y.reshape(bl, sl, d), aux
+
+
+def apply_moe_ep(p, x: jax.Array, cfg: ModelConfig):
+    """shard_map EP dispatch; falls back to the routed path when the
+    mesh/expert shapes don't allow it (e.g. grok's 8e on a 16-way axis
+    or single-device tests)."""
+    from repro.models import layers as L
+    from repro.models import moe as M
+
+    mesh = _mesh_info()
+    if mesh is None or cfg.num_experts % mesh.shape["model"] != 0:
+        return M.apply_moe_routed(p, x, cfg)
+
+    ranks = mesh.shape["model"]
+    fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    seq_sharded = L.CONTEXT_PARALLEL and x.shape[1] % ranks == 0
+    xspec = P(fsdp or None, "model" if seq_sharded else None, None)
+    pspec = {
+        "router": P(*(None,) * p["router"].ndim),
+        "w_gate": P("model", None, None),
+        "w_up": P("model", None, None),
+        "w_down": P("model", None, None),
+    }
+    # qtensor leaves: shard codes like the weight, replicate lut/qmeta
+    def leaf_spec(name, leaf):
+        base = pspec[name]
+        if isinstance(leaf, dict):
+            return {"codes": base,
+                    "lut": P(*("model",) + (None,) * (leaf["lut"].ndim - 1))
+                    if leaf["lut"].ndim > 1 else P(None),
+                    "qmeta": P(*("model",) + (None,) * (leaf["qmeta"].ndim - 1))
+                    if leaf["qmeta"].ndim > 1 else P(None)}
+        return base
+
+    in_specs = (
+        {k: leaf_spec(k, v) for k, v in p.items()},
+        xspec,
+    )
+    out_specs = (xspec, P())
+
+    fn = shard_map(
+        lambda pp, xx: _local_moe(pp, xx, cfg, ranks, seq_sharded),
+        mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=False)
+    return fn(p, x)

@@ -1,0 +1,131 @@
+"""Minimal pure-functional parameter system (no flax offline).
+
+Models declare a pytree of :class:`ParamSpec` (shape + *logical axis
+names* + initializer).  From the spec tree we derive
+
+* concrete parameters            — :func:`init_params`
+* ShapeDtypeStruct stand-ins     — :func:`abstract_params` (dry-run)
+* the logical-axes tree          — :func:`logical_axes`
+
+Logical axis names (``"embed"``, ``"mlp"``, ``"heads"``, ``"vocab"``,
+``"experts"``, ``"layers"`` …) are resolved to mesh axes by
+:mod:`repro.sharding.rules`.  Per-layer parameters are *stacked* along a
+leading ``"layers"`` axis so model forwards can ``lax.scan`` over depth
+(compile-time O(1) in depth — the production pattern).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | embed | scaled
+    scale: float | None = None    # stddev override (normal/scaled)
+    fan_in_axis: int | None = None  # for 'scaled': 1/sqrt(fan_in)
+    dtype: Any = None             # override model param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def _init_leaf(rng: jax.Array, spec: ParamSpec, dtype) -> jax.Array:
+    dtype = spec.dtype or dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init in ("normal", "embed"):
+        std = spec.scale if spec.scale is not None else 0.02
+        return (jax.random.normal(rng, spec.shape, jnp.float32) * std).astype(dtype)
+    if spec.init == "scaled":
+        fan_axis = spec.fan_in_axis if spec.fan_in_axis is not None else -2
+        fan_in = spec.shape[fan_axis] if len(spec.shape) > 1 else spec.shape[0]
+        std = (spec.scale or 1.0) / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(rng, spec.shape, jnp.float32) * std).astype(dtype)
+    raise ValueError(f"unknown init {spec.init}")
+
+
+def init_params(rng: jax.Array, specs, dtype=jnp.float32):
+    """Materialize the spec tree into parameter arrays."""
+    leaves, treedef = jax.tree_util.tree_flatten(specs, is_leaf=is_spec)
+    rngs = jax.random.split(rng, len(leaves))
+    out = [_init_leaf(r, s, dtype) for r, s in zip(rngs, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstract_params(specs, dtype=jnp.float32):
+    """ShapeDtypeStruct tree for lowering without allocation."""
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype or dtype),
+        specs, is_leaf=is_spec,
+    )
+
+
+def logical_axes(specs):
+    """Tree of logical-axis tuples, same structure as the params."""
+    return jax.tree_util.tree_map(lambda s: s.axes, specs, is_leaf=is_spec)
+
+
+def stacked(spec: ParamSpec, num_layers: int) -> ParamSpec:
+    """Add the leading scan axis."""
+    return dataclasses.replace(
+        spec, shape=(num_layers, *spec.shape), axes=("layers", *spec.axes)
+    )
+
+
+def stack_specs(specs, num_layers: int):
+    """Stack every spec in a per-layer tree along a leading layers axis."""
+    return jax.tree_util.tree_map(
+        lambda s: stacked(s, num_layers), specs, is_leaf=is_spec
+    )
+
+
+def param_count(specs) -> int:
+    return sum(
+        math.prod(s.shape)
+        for s in jax.tree_util.tree_leaves(specs, is_leaf=is_spec)
+    )
+
+
+def param_bytes(specs, dtype=jnp.bfloat16) -> int:
+    itemsize = jnp.dtype(dtype).itemsize
+    return param_count(specs) * itemsize
+
+
+# ---------------------------------------------------------------- misc --
+
+def cast_tree(tree, dtype):
+    return jax.tree_util.tree_map(
+        lambda x: x.astype(dtype) if hasattr(x, "astype") else x, tree
+    )
+
+
+def scan_blocks(body, carry, stacked, cfg, with_outputs=False):
+    """lax.scan over stacked per-layer params, or Python unroll when
+    cfg.scan_layers is False (dry-run cost extraction)."""
+    if cfg.scan_layers:
+        return jax.lax.scan(body, carry, stacked)
+    n = jax.tree_util.tree_leaves(stacked)[0].shape[0]
+    outs = []
+    for i in range(n):
+        layer = jax.tree_util.tree_map(lambda x: x[i], stacked)
+        carry, out = body(carry, layer)
+        outs.append(out)
+    if with_outputs or (outs and outs[0] is not None):
+        stack = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *outs) \
+            if outs and outs[0] is not None else None
+        return carry, stack
+    return carry, None

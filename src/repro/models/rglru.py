@@ -1,0 +1,293 @@
+"""RecurrentGemma / Griffin hybrid: RG-LRU recurrent blocks + local MQA
+(arXiv:2402.19427).  Pattern "rec, rec, local" repeating (1 attention per
+2 recurrences), window 2048.
+
+The RG-LRU runs as a ``jax.lax.associative_scan`` over time for
+train/prefill (log-depth, TPU-friendly) and carries O(1) state at decode
+— which is why this arch (and rwkv6) serves the ``long_500k`` cell that
+pure full-attention archs skip.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lama_layers as ll
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec
+
+C_RGLRU = 8.0
+
+
+# --------------------------------------------------------------- specs --
+
+def rglru_specs(cfg: ModelConfig) -> dict:
+    d, dr = cfg.d_model, cfg.rnn_width or cfg.d_model
+    return {
+        "w_in_gate": ParamSpec((d, dr), ("embed", "mlp"), "scaled"),
+        "w_in_rec": ParamSpec((d, dr), ("embed", "mlp"), "scaled"),
+        "conv_w": ParamSpec((cfg.conv_width, dr), (None, "mlp"), "scaled",
+                            fan_in_axis=0),
+        "conv_b": ParamSpec((dr,), ("mlp",), "zeros"),
+        "wa": ParamSpec((dr, dr), ("mlp", "mlp2"), "scaled"),
+        "ba": ParamSpec((dr,), ("mlp",), "zeros"),
+        "wx": ParamSpec((dr, dr), ("mlp", "mlp2"), "scaled"),
+        "bx": ParamSpec((dr,), ("mlp",), "zeros"),
+        "lam": ParamSpec((dr,), ("mlp",), "normal", scale=0.5),
+        "w_out": ParamSpec((dr, d), ("mlp", "embed"), "scaled"),
+    }
+
+
+def block_specs(cfg: ModelConfig, kind: str) -> dict:
+    s = {"ln1": L.norm_specs(cfg), "ln2": L.norm_specs(cfg)}
+    if kind == "local":
+        s["attn"] = L.attention_specs(cfg)
+    else:
+        s["rec"] = rglru_specs(cfg)
+    s["mlp"] = L.mlp_specs(cfg)
+    return s
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    pat = cfg.attention_pattern or ("rec", "rec", "local")
+    return [pat[i % len(pat)] for i in range(cfg.num_layers)]
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    blocks = {
+        f"layer_{i:02d}": block_specs(cfg, kind)
+        for i, kind in enumerate(layer_kinds(cfg))
+    }
+    return {
+        "embed": L.embed_specs(cfg),
+        "blocks": blocks,
+        "ln_f": L.norm_specs(cfg),
+        **({} if cfg.tie_embeddings else {"unembed": L.unembed_specs(cfg)}),
+    }
+
+
+# --------------------------------------------------------------- rglru --
+
+def _gates(p, x):
+    r = jax.nn.sigmoid(ll.dense(x, p["wa"]) + p["ba"].astype(x.dtype))
+    i = jax.nn.sigmoid(ll.dense(x, p["wx"]) + p["bx"].astype(x.dtype))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * \
+        r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, (mult * i.astype(jnp.float32) * x.astype(jnp.float32))
+
+
+def rglru_scan(p, x: jax.Array) -> jax.Array:
+    """x: [B, S, Dr] -> recurrent output, h_t = a_t h_{t-1} + b_t."""
+    a, b = _gates(p, x)
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, b1 * a2 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(x.dtype)
+
+
+def rglru_step(p, x: jax.Array, h_prev: jax.Array):
+    """One decode step.  x: [B, 1, Dr]; h_prev: [B, Dr]."""
+    a, b = _gates(p, x)
+    h = a[:, 0] * h_prev.astype(jnp.float32) + b[:, 0]
+    return h.astype(x.dtype)[:, None, :], h
+
+
+def temporal_conv(p, x: jax.Array, state: jax.Array | None = None):
+    """Causal depthwise conv over time (width cfg.conv_width).
+
+    x: [B, S, Dr].  ``state``: [B, W-1, Dr] trailing context (decode).
+    Returns (y, new_state)."""
+    w = p["conv_w"].astype(x.dtype)          # [W, Dr]
+    width = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)   # [B, S+W-1, Dr]
+    y = sum(
+        xp[:, i:i + x.shape[1], :] * w[i][None, None, :] for i in range(width)
+    ) + p["conv_b"].astype(x.dtype)
+    new_state = xp[:, -(width - 1):, :]
+    return y, new_state
+
+
+def rec_block(p, x: jax.Array, cfg: ModelConfig,
+              state: dict | None = None):
+    """Griffin recurrent temporal-mixing block.  Returns (y, new_state)."""
+    gate = jax.nn.gelu(ll.dense(x, p["w_in_gate"]))
+    u = ll.dense(x, p["w_in_rec"])
+    u, conv_state = temporal_conv(p, u, state["conv"] if state else None)
+    if state is None:
+        h = rglru_scan(p, u)
+        new_state = {"conv": conv_state, "h": h[:, -1, :]}
+    else:
+        h, h_last = rglru_step(p, u, state["h"])
+        new_state = {"conv": conv_state, "h": h_last}
+    return ll.dense(h * gate, p["w_out"]), new_state
+
+
+def init_rec_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    dr = cfg.rnn_width or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
+        "h": jnp.zeros((batch, dr), dtype),
+    }
+
+
+# ------------------------------------------------------- local attention --
+
+def init_window_cache(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16) -> dict:
+    kv, hd, w = cfg.num_kv_heads, cfg.resolved_head_dim, cfg.window
+    return {
+        "k": jnp.zeros((batch, w, kv, hd), dtype),
+        "v": jnp.zeros((batch, w, kv, hd), dtype),
+        "kpos": jnp.full((w,), -1, jnp.int32),
+    }
+
+
+def local_attn_block(p, x, cfg: ModelConfig, positions,
+                     cache: dict | None, pos):
+    """Windowed MQA.  Full-seq path uses a local mask; decode path uses a
+    ring-buffer cache of size ``cfg.window``."""
+    if cache is None:
+        mask = ("local", cfg.window)
+        return L.mha(p, x, cfg, positions, mask), None
+    # decode: write this step's K/V at pos % window
+    k_new, v_new = L.self_kv(p, x, cfg, positions)
+    slot = pos % cfg.window
+    k = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    kpos = jax.lax.dynamic_update_slice_in_dim(
+        cache["kpos"], pos[None].astype(jnp.int32), slot, axis=0)
+    valid = (kpos >= 0) & (kpos <= pos) & (kpos > pos - cfg.window)
+    mask = jnp.broadcast_to(valid[None, :], (1, cfg.window))
+    out = L.mha(p, x, cfg, positions, mask,
+                kv=(k.astype(x.dtype), v.astype(x.dtype)))
+    return out, {"k": k, "v": v, "kpos": kpos}
+
+
+# --------------------------------------------------------------- model --
+
+def forward(params, tokens, cfg: ModelConfig, prefix_embeds=None):
+    x = L.constrain_act(L.embed_tokens(params["embed"], tokens, cfg))
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    aux = jnp.zeros((), jnp.float32)
+    for i, kind in enumerate(layer_kinds(cfg)):
+        p = params["blocks"][f"layer_{i:02d}"]
+
+        def blk(x, p=p, kind=kind):
+            h = L.apply_norm(p["ln1"], x, cfg)
+            if kind == "local":
+                y, _ = local_attn_block(p["attn"], h, cfg, positions, None, None)
+            else:
+                y, _ = rec_block(p["rec"], h, cfg)
+            x = x + y
+            h = L.apply_norm(p["ln2"], x, cfg)
+            return L.constrain_act(x + L.apply_mlp(p["mlp"], h, cfg))
+
+        x = jax.checkpoint(blk)(x) if cfg.remat == "block" else blk(x)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.logits_fn(params, x, cfg), aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    cache = {"pos": jnp.zeros((), jnp.int32)}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        key = f"layer_{i:02d}"
+        if kind == "local":
+            cache[key] = init_window_cache(cfg, batch, dtype)
+        else:
+            cache[key] = init_rec_state(cfg, batch, dtype)
+    return cache
+
+
+def abstract_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype)),
+    )
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (b, s))
+    new_cache = {"pos": pos + 1}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        key = f"layer_{i:02d}"
+        p = params["blocks"][key]
+        h = L.apply_norm(p["ln1"], x, cfg)
+        if kind == "local":
+            y, st = local_attn_block(p["attn"], h, cfg, positions,
+                                     cache[key], pos)
+        else:
+            y, st = rec_block(p["rec"], h, cfg, state=cache[key])
+        new_cache[key] = st
+        x = x + y
+        h = L.apply_norm(p["ln2"], x, cfg)
+        x = L.constrain_act(x + L.apply_mlp(p["mlp"], h, cfg))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.logits_fn(params, x, cfg), new_cache
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            prefix_embeds=None, cache_dtype=jnp.bfloat16):
+    """Prompt pass building decode state: run full forward then one
+    sequential pass is avoided by scanning decode over the prompt for the
+    recurrent state — implemented as full-seq forward + state extraction.
+
+    For simplicity (and identical numerics) we run the full-sequence path
+    and rebuild the decode caches from the final window / final hidden
+    recurrence, which the tests cross-check against step-by-step decode.
+    """
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    cache = {"pos": jnp.asarray(s, jnp.int32)}
+    for i, kind in enumerate(layer_kinds(cfg)):
+        key = f"layer_{i:02d}"
+        p = params["blocks"][key]
+        h = L.apply_norm(p["ln1"], x, cfg)
+        if kind == "local":
+            y, _ = local_attn_block(p["attn"], h, cfg, positions, None, None)
+            # build ring cache from the trailing window of K/V
+            k_all, v_all = L.self_kv(p["attn"], h, cfg, positions)
+            w = cfg.window
+            ring = init_window_cache(cfg, b, cache_dtype)
+            take = min(w, s)
+            kpos_vals = jnp.arange(s - take, s, dtype=jnp.int32)
+            slots = kpos_vals % w
+            ring["k"] = ring["k"].at[:, slots].set(
+                k_all[:, -take:].astype(cache_dtype))
+            ring["v"] = ring["v"].at[:, slots].set(
+                v_all[:, -take:].astype(cache_dtype))
+            ring["kpos"] = ring["kpos"].at[slots].set(kpos_vals)
+            cache[key] = ring
+        else:
+            gate = jax.nn.gelu(ll.dense(h, p["rec"]["w_in_gate"]))
+            u = ll.dense(h, p["rec"]["w_in_rec"])
+            uc, conv_state = temporal_conv(p["rec"], u, None)
+            hseq = rglru_scan(p["rec"], uc)
+            y = ll.dense(hseq * gate, p["rec"]["w_out"])
+            cache[key] = {"conv": conv_state.astype(cache_dtype),
+                          "h": hseq[:, -1, :].astype(cache_dtype)}
+        x = x + y
+        h2 = L.apply_norm(p["ln2"], x, cfg)
+        x = L.constrain_act(x + L.apply_mlp(p["mlp"], h2, cfg))
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.logits_fn(params, x[:, -1:, :], cfg)
+    return logits, cache

@@ -1,0 +1,261 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): attention-free LM with
+data-dependent token-shift (DD-lerp via LoRA) and data-dependent
+per-channel decay in the WKV linear-attention recurrence.
+
+State at decode is O(1) per layer ([B,H,K,V] WKV state + token-shift
+vectors), which is why this arch serves ``long_500k``.
+
+Note (DESIGN.md §4): LamaAccel's trick of writing attention K/V matrices
+into DRAM banks as FC weights is *inapplicable* here — there are no K/V
+GEMMs — but all projection matrices remain Lama-quantizable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lama_layers as ll
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import ParamSpec, stack_specs, scan_blocks
+
+LORA_SHIFT = 32   # DD-lerp LoRA rank
+LORA_DECAY = 64   # decay LoRA rank
+MIX_NAMES = ("w", "k", "v", "r", "g")
+
+
+def _heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def time_mix_specs(cfg: ModelConfig) -> dict:
+    d = cfg.d_model
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    s = {
+        "mu_base": ParamSpec((d,), ("embed",), "normal", scale=0.1),
+        "mu": ParamSpec((5, d), (None, "embed"), "normal", scale=0.1),
+        "lora_a": ParamSpec((d, 5 * LORA_SHIFT), ("embed", None), "scaled"),
+        "lora_b": ParamSpec((5, LORA_SHIFT, d), (None, None, "embed"),
+                            "scaled", fan_in_axis=1),
+        "w_r": ParamSpec((d, d), ("embed", "heads_mix"), "scaled"),
+        "w_k": ParamSpec((d, d), ("embed", "heads_mix"), "scaled"),
+        "w_v": ParamSpec((d, d), ("embed", "heads_mix"), "scaled"),
+        "w_g": ParamSpec((d, d), ("embed", "heads_mix"), "scaled"),
+        "w_o": ParamSpec((d, d), ("heads_mix", "embed"), "scaled"),
+        "decay_base": ParamSpec((d,), ("embed",), "normal", scale=0.5),
+        "decay_a": ParamSpec((d, LORA_DECAY), ("embed", None), "scaled"),
+        "decay_b": ParamSpec((LORA_DECAY, d), (None, "embed"), "scaled"),
+        "bonus_u": ParamSpec((h, hd), ("rwkv_heads", None), "normal", scale=0.5),
+        "gn_scale": ParamSpec((d,), ("embed",), "ones"),
+    }
+    return s
+
+
+def channel_mix_specs(cfg: ModelConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mu_k": ParamSpec((d,), ("embed",), "normal", scale=0.1),
+        "mu_r": ParamSpec((d,), ("embed",), "normal", scale=0.1),
+        "w_k": ParamSpec((d, f), ("embed", "mlp"), "scaled"),
+        "w_v": ParamSpec((f, d), ("mlp", "embed"), "scaled", fan_in_axis=0),
+        "w_r": ParamSpec((d, d), ("embed", "embed2"), "scaled"),
+    }
+
+
+def block_specs(cfg: ModelConfig) -> dict:
+    return {
+        "ln1": L.norm_specs(cfg, "layernorm"),
+        "tmix": time_mix_specs(cfg),
+        "ln2": L.norm_specs(cfg, "layernorm"),
+        "cmix": channel_mix_specs(cfg),
+    }
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    return {
+        "embed": L.embed_specs(cfg),
+        "ln_in": L.norm_specs(cfg, "layernorm"),
+        "blocks": stack_specs(block_specs(cfg), cfg.num_layers),
+        "ln_f": L.norm_specs(cfg, "layernorm"),
+        "unembed": L.unembed_specs(cfg),
+    }
+
+
+# -------------------------------------------------------------- mixing --
+
+def _dd_lerp(p, x: jax.Array, x_prev: jax.Array):
+    """Finch data-dependent token shift: one lerp per projection."""
+    diff = x_prev - x
+    z = x + diff * p["mu_base"].astype(x.dtype)
+    lora = jnp.tanh(ll.dense(z, p["lora_a"]))                  # [B,S,5*r]
+    b, s, _ = lora.shape
+    lora = lora.reshape(b, s, 5, LORA_SHIFT)
+    adj = jnp.einsum("bsnr,nrd->nbsd", lora,
+                 ll.materialize(p["lora_b"], x.dtype))
+    outs = []
+    for i, _ in enumerate(MIX_NAMES):
+        m = p["mu"][i].astype(x.dtype) + adj[i]
+        outs.append(x + diff * m)
+    return outs  # order: w, k, v, r, g
+
+
+def _shift(x: jax.Array, last: jax.Array | None):
+    """x_{t-1} sequence; ``last`` is the carry token at decode."""
+    if last is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1, :]
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def wkv_scan(r, k, v, w, u, state: jax.Array | None):
+    """WKV recurrence.  r,k,v,w: [B,S,H,hd]; u: [H,hd].
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t;  y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+    Sequential lax.scan over time (data-dependent decay).  Returns
+    (y [B,S,H,hd], final state [B,H,K,V])."""
+    b, s, h, hd = r.shape
+    if state is None:
+        state = jnp.zeros((b, h, hd, hd), jnp.float32)
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # [B,H,hd] each
+        kv = kt[..., :, None] * vt[..., None, :]            # [B,H,K,V]
+        yt = jnp.einsum("bhk,bhkv->bhv", rt,
+                        S + u[None, :, :, None] * kv)
+        S = wt[..., :, None] * S + kv
+        return S, yt
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0) for t in (r, k, v, w))
+    final, ys = jax.lax.scan(step, state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(r.dtype), final
+
+
+def time_mix(p, x: jax.Array, cfg: ModelConfig, state: dict | None):
+    b, s, d = x.shape
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    last = state["tshift"] if state else None
+    xw, xk, xv, xr, xg = _dd_lerp(p, x, _shift(x, last))
+
+    r = ll.dense(xr, p["w_r"]).reshape(b, s, h, hd)
+    k = ll.dense(xk, p["w_k"]).reshape(b, s, h, hd)
+    v = ll.dense(xv, p["w_v"]).reshape(b, s, h, hd)
+    g = jax.nn.silu(ll.dense(xg, p["w_g"]))
+
+    dec = p["decay_base"].astype(jnp.float32) + ll.dense(
+        jnp.tanh(ll.dense(xw, p["decay_a"])), p["decay_b"]).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(dec)).reshape(b, s, h, hd)
+
+    y, wkv_state = wkv_scan(r, k, v, w, p["bonus_u"].astype(jnp.float32),
+                            state["wkv"].astype(jnp.float32) if state else None)
+    y = y.reshape(b, s, d)
+    # per-head group norm
+    yf = y.astype(jnp.float32).reshape(b, s, h, hd)
+    mu = jnp.mean(yf, axis=-1, keepdims=True)
+    var = jnp.var(yf, axis=-1, keepdims=True)
+    y = ((yf - mu) * jax.lax.rsqrt(var + 1e-5)).reshape(b, s, d)
+    y = (y * p["gn_scale"].astype(jnp.float32)).astype(x.dtype)
+
+    out = ll.dense(y * g, p["w_o"])
+    new_state = {"tshift": x[:, -1, :], "wkv": wkv_state}
+    return out, new_state
+
+
+def channel_mix(p, x: jax.Array, state: dict | None):
+    last = state["tshift"] if state else None
+    prev = _shift(x, last)
+    xk = x + (prev - x) * p["mu_k"].astype(x.dtype)
+    xr = x + (prev - x) * p["mu_r"].astype(x.dtype)
+    k = jnp.square(jax.nn.relu(ll.dense(xk, p["w_k"])))
+    rv = jax.nn.sigmoid(ll.dense(xr, p["w_r"])) * ll.dense(k, p["w_v"])
+    return rv, {"tshift": x[:, -1, :]}
+
+
+# --------------------------------------------------------------- model --
+
+def forward(params, tokens, cfg: ModelConfig, prefix_embeds=None):
+    x = L.constrain_act(L.embed_tokens(params["embed"], tokens, cfg))
+    x = L.apply_norm(params["ln_in"], x, cfg, "layernorm")
+
+    def body(x, p):
+        def blk(x):
+            h = L.apply_norm(p["ln1"], x, cfg, "layernorm")
+            y, _ = time_mix(p["tmix"], h, cfg, None)
+            x = x + y
+            h = L.apply_norm(p["ln2"], x, cfg, "layernorm")
+            y, _ = channel_mix(p["cmix"], h, None)
+            return L.constrain_act(x + y)
+        x = jax.checkpoint(blk)(x) if cfg.remat == "block" else blk(x)
+        return x, None
+
+    x, _ = scan_blocks(body, x, params["blocks"], cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg, "layernorm")
+    return L.logits_fn(params, x, cfg), jnp.zeros((), jnp.float32)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    h, hd = _heads(cfg), cfg.rwkv_head_dim
+    L_ = cfg.num_layers
+    d = cfg.d_model
+    return {
+        "tshift_t": jnp.zeros((L_, batch, d), dtype),
+        "wkv": jnp.zeros((L_, batch, h, hd, hd), jnp.float32),
+        "tshift_c": jnp.zeros((L_, batch, d), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg, batch, max_len, dtype=jnp.bfloat16):
+    return jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype),
+        jax.eval_shape(lambda: init_cache(cfg, batch, max_len, dtype)),
+    )
+
+
+def decode_step(params, cache, tokens, cfg: ModelConfig):
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = L.apply_norm(params["ln_in"], x, cfg, "layernorm")
+
+    def body(x, layer_in):
+        p, ts_t, wkv, ts_c = layer_in
+        h = L.apply_norm(p["ln1"], x, cfg, "layernorm")
+        y, st_t = time_mix(p["tmix"], h, cfg,
+                           {"tshift": ts_t.astype(h.dtype), "wkv": wkv})
+        x = x + y
+        h = L.apply_norm(p["ln2"], x, cfg, "layernorm")
+        y, st_c = channel_mix(p["cmix"], h, {"tshift": ts_c.astype(h.dtype)})
+        x = L.constrain_act(x + y)
+        return x, (st_t["tshift"].astype(ts_t.dtype), st_t["wkv"],
+                   st_c["tshift"].astype(ts_c.dtype))
+
+    x, (ts_t, wkv, ts_c) = scan_blocks(
+        body, x,
+        (params["blocks"], cache["tshift_t"], cache["wkv"], cache["tshift_c"]),
+        cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg, "layernorm")
+    logits = L.logits_fn(params, x, cfg)
+    return logits, {"tshift_t": ts_t, "wkv": wkv, "tshift_c": ts_c,
+                    "pos": cache["pos"] + 1}
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int,
+            prefix_embeds=None, cache_dtype=jnp.bfloat16):
+    """Prompt pass: full-sequence forward capturing final per-layer state."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    x = L.apply_norm(params["ln_in"], x, cfg, "layernorm")
+
+    def body(x, p):
+        h = L.apply_norm(p["ln1"], x, cfg, "layernorm")
+        y, st_t = time_mix(p["tmix"], h, cfg, None)
+        x = x + y
+        h = L.apply_norm(p["ln2"], x, cfg, "layernorm")
+        y, st_c = channel_mix(p["cmix"], h, None)
+        x = L.constrain_act(x + y)
+        return x, (st_t["tshift"].astype(cache_dtype), st_t["wkv"],
+                   st_c["tshift"].astype(cache_dtype))
+
+    x, (ts_t, wkv, ts_c) = scan_blocks(body, x, params["blocks"], cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg, "layernorm")
+    logits = L.logits_fn(params, x[:, -1:, :], cfg)
+    cache = {"tshift_t": ts_t, "wkv": wkv, "tshift_c": ts_c,
+             "pos": jnp.asarray(tokens.shape[1], jnp.int32)}
+    return logits, cache

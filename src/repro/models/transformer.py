@@ -1,0 +1,212 @@
+"""Decoder-only transformer LM (olmo/qwen3/minicpm/llama4/grok/paligemma).
+
+Pure-functional, scan-over-layers (HLO depth-independent), KV-cache
+serving path, optional MoE blocks, optional multimodal prefix with
+prefix-LM masking (PaliGemma).  Every matmul is Lama-quantizable.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.params import ParamSpec, stack_specs, scan_blocks
+
+
+# --------------------------------------------------------------- specs --
+
+def block_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "ln1": L.norm_specs(cfg),
+        "attn": L.attention_specs(cfg),
+        "ln2": L.norm_specs(cfg),
+    }
+    if cfg.is_moe:
+        s["moe"] = M.moe_specs(cfg)
+    else:
+        s["mlp"] = L.mlp_specs(cfg)
+    return s
+
+
+def model_specs(cfg: ModelConfig) -> dict:
+    s = {
+        "embed": L.embed_specs(cfg),
+        "blocks": stack_specs(block_specs(cfg), cfg.num_layers),
+        "ln_f": L.norm_specs(cfg),
+    }
+    s.update({"unembed": L.unembed_specs(cfg)} if not cfg.tie_embeddings else {})
+    return s
+
+
+# --------------------------------------------------------------- cache --
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype),
+        "v": jnp.zeros((cfg.num_layers, batch, max_len, kv, hd), dtype),
+        "pos": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    return {
+        "k": jax.ShapeDtypeStruct((cfg.num_layers, batch, max_len, kv, hd), dtype),
+        "v": jax.ShapeDtypeStruct((cfg.num_layers, batch, max_len, kv, hd), dtype),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+# ------------------------------------------------------------- forward --
+
+def _block(p, x, cfg: ModelConfig, positions, mask, kv=None):
+    """One transformer block; returns (y, aux_loss, new_kv)."""
+    h = L.apply_norm(p["ln1"], x, cfg)
+    if kv is None:
+        new_kv = L.self_kv(p["attn"], h, cfg, positions)
+        attn_kv = None
+    else:
+        new_kv = L.self_kv(p["attn"], h, cfg, positions)
+        # merge this step's K,V into the cache view handed to attention
+        attn_kv = kv
+    attn = L.mha(p["attn"], h, cfg, positions, mask, kv=attn_kv)
+    x = x + attn
+    h = L.apply_norm(p["ln2"], x, cfg)
+    if cfg.is_moe:
+        y, aux = M.apply_moe(p["moe"], h, cfg)
+    else:
+        y, aux = L.apply_mlp(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+    return x + y, aux, new_kv
+
+
+def forward(
+    params,
+    tokens: jax.Array,                 # [B, S] int32
+    cfg: ModelConfig,
+    prefix_embeds: jax.Array | None = None,   # [B, P, D] (vlm/audio stub)
+) -> tuple[jax.Array, jax.Array]:
+    """Full-sequence forward.  Returns (logits [B,S',V], aux_loss)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    x = L.constrain_act(x)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if prefix_embeds is not None:
+        mask = ("prefix", prefix_embeds.shape[1])
+    else:
+        mask = ("causal", None)
+
+    def body(carry, blk_params):
+        x, aux = carry
+        y, a, _ = _block(blk_params, x, cfg, positions, mask)
+        return (L.constrain_act(y), aux + a), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "block" else body
+    (x, aux), _ = scan_blocks(body_fn, (x, jnp.zeros((), jnp.float32)),
+                              params["blocks"], cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    return L.logits_fn(params, x, cfg), aux / max(cfg.num_layers, 1)
+
+
+def prefill(
+    params,
+    tokens: jax.Array,                 # [B, S]
+    cfg: ModelConfig,
+    max_len: int,
+    prefix_embeds: jax.Array | None = None,
+    cache_dtype=jnp.bfloat16,
+):
+    """Run the prompt, build the KV cache.  Returns (last_logits, cache)."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    if prefix_embeds is not None:
+        x = jnp.concatenate([prefix_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    if prefix_embeds is not None:
+        mask = ("prefix", prefix_embeds.shape[1])
+    else:
+        mask = ("causal", None)
+
+    def body(carry, blk_params):
+        x, aux = carry
+        y, a, (k, v) = _block(blk_params, x, cfg, positions, mask)
+        y = L.constrain_act(y)
+        pad = max_len - s
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))).astype(cache_dtype)
+        return (y, aux + a), (k, v)
+
+    (x, _aux), (ks, vs) = scan_blocks(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"], cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.logits_fn(params, x[:, -1:, :], cfg)
+    cache = {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
+    return logits, cache
+
+
+def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig):
+    """One token step.  tokens: [B, 1].  Returns (logits, new_cache)."""
+    x = L.constrain_act(L.embed_tokens(params["embed"], tokens, cfg))
+    b, s, _ = x.shape
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos, (b, s))
+    max_len = cache["k"].shape[2]
+    kp = jnp.arange(max_len)
+    mask = (kp[None, :] <= pos)  # [1, max_len], same for all queries
+    mask = jnp.broadcast_to(mask, (s, max_len))
+
+    def body(carry, layer_in):
+        x, = carry
+        blk_params, k_cache, v_cache = layer_in
+        h = L.apply_norm(blk_params["ln1"], x, cfg)
+        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
+        attn = L.mha(blk_params["attn"], h, cfg, positions, mask,
+                     kv=(k_cache.astype(x.dtype), v_cache.astype(x.dtype)))
+        x = x + attn
+        h = L.apply_norm(blk_params["ln2"], x, cfg)
+        if cfg.is_moe:
+            y, _ = M.apply_moe(blk_params["moe"], h, cfg)
+        else:
+            y = L.apply_mlp(blk_params["mlp"], h, cfg)
+        return (L.constrain_act(x + y),), (k_cache, v_cache)
+
+    (x,), (ks, vs) = scan_blocks(
+        body, (x,), (params["blocks"], cache["k"], cache["v"]), cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.logits_fn(params, x, cfg)
+    return logits, {"k": ks, "v": vs, "pos": pos + 1}
+
+
+# ---------------------------------------------------------------- loss --
+
+def lm_loss(params, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """Next-token cross-entropy with z-loss.  batch: tokens/targets [B,S]."""
+    logits, aux = forward(params, batch["tokens"], cfg,
+                          prefix_embeds=batch.get("prefix_embeds"))
+    if "prefix_embeds" in batch and batch["prefix_embeds"] is not None:
+        logits = logits[:, batch["prefix_embeds"].shape[1]:, :]
+    targets = batch["targets"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = logz - tgt_logit
+    mask = batch.get("mask")
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    zl = cfg.z_loss * jnp.sum((logz ** 2) * mask) / denom
+    total = loss + zl + 0.01 * aux
+    return total, {"loss": loss, "z_loss": zl, "aux_loss": aux,
+                   "ppl_proxy": jnp.exp(jnp.minimum(loss, 20.0))}

@@ -1,0 +1,2 @@
+from repro.optim import adamw, schedule  # noqa: F401
+from repro.optim.adamw import AdamWState  # noqa: F401

@@ -1,0 +1,32 @@
+"""LR schedules: cosine (default) and WSD (warmup-stable-decay), the
+MiniCPM schedule [arXiv:2404.06395] selected for the minicpm-2b arch."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine(step, base_lr: float, warmup: int, total: int, min_frac: float = 0.1):
+    step = jnp.asarray(step, jnp.float32)
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+    cos = base_lr * (min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < warmup, warm, cos)
+
+
+def wsd(step, base_lr: float, warmup: int, total: int,
+        decay_frac: float = 0.1, min_frac: float = 0.01):
+    """Warmup -> stable plateau -> short exponential-ish decay tail."""
+    step = jnp.asarray(step, jnp.float32)
+    decay_steps = jnp.maximum(total * decay_frac, 1.0)
+    decay_start = total - decay_steps
+    warm = base_lr * step / jnp.maximum(warmup, 1)
+    tail_prog = jnp.clip((step - decay_start) / decay_steps, 0.0, 1.0)
+    tail = base_lr * jnp.power(min_frac, tail_prog)  # exp decay to min
+    lr = jnp.where(step < warmup, warm,
+                   jnp.where(step < decay_start, base_lr, tail))
+    return lr
+
+
+def get_schedule(name: str):
+    return {"cosine": cosine, "wsd": wsd}[name]

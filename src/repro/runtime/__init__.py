@@ -1,0 +1,7 @@
+from repro.runtime.fault_tolerance import (  # noqa: F401
+    PreemptionSignal,
+    StragglerWatchdog,
+    with_retries,
+)
+from repro.runtime.server import InferenceServer, Request  # noqa: F401
+from repro.runtime.trainer import TrainConfig, Trainer  # noqa: F401

@@ -1,0 +1,149 @@
+"""Training loop: sharded jit step, schedules, checkpoint/resume,
+straggler watchdog, preemption handling.
+
+The same Trainer drives the tiny CPU examples and (unchanged) a real
+mesh: every structural decision — donated buffers, sharding trees,
+restart-stable data, atomic checkpoints — is the production shape.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from pathlib import Path
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import manager as ckpt
+from repro.configs.base import ModelConfig
+from repro.data import DataConfig, SyntheticLM
+from repro.launch.mesh import make_host_mesh
+from repro.models import api as mapi
+from repro.models.params import abstract_params, logical_axes
+from repro.optim import adamw, schedule as sched
+from repro.runtime.fault_tolerance import PreemptionSignal, StragglerWatchdog
+from repro.sharding import rules as R
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    global_batch: int = 8
+    seq_len: int = 128
+    lr: float = 3e-4
+    warmup: int = 10
+    schedule: str = "cosine"          # cosine | wsd (minicpm)
+    weight_decay: float = 0.1
+    max_grad_norm: float = 1.0
+    ckpt_dir: str | None = None
+    ckpt_every: int = 50
+    keep: int = 3
+    seed: int = 0
+    log_every: int = 10
+    preempt_flag: str | None = None
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, mesh=None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.mesh = mesh or make_host_mesh()
+        self.api = mapi.get_model(cfg)
+        self.data = SyntheticLM(DataConfig(
+            vocab_size=cfg.vocab_size, global_batch=tcfg.global_batch,
+            seq_len=tcfg.seq_len, seed=tcfg.seed))
+        self.watchdog = StragglerWatchdog()
+        self.preempt = PreemptionSignal(tcfg.preempt_flag)
+
+        aparams = abstract_params(self.api.specs, jnp.float32)
+        axes = logical_axes(self.api.specs)
+        self.p_shard = R.tree_shardings(aparams, axes, self.mesh, "train")
+        aopt = adamw.abstract_state(aparams)
+        self.o_shard = adamw.AdamWState(
+            step=R.tree_shardings(aopt.step, (), self.mesh, "train"),
+            mu=R.tree_shardings(aopt.mu, axes, self.mesh, "train"),
+            nu=R.tree_shardings(aopt.nu, axes, self.mesh, "train"),
+        )
+        self._step_fn = self._build_step()
+
+    # ------------------------------------------------------------------
+    def _lr(self, step):
+        fn = sched.get_schedule(self.tcfg.schedule)
+        return fn(step, self.tcfg.lr, self.tcfg.warmup, self.tcfg.steps)
+
+    def _build_step(self):
+        cfg, tcfg, api = self.cfg, self.tcfg, self.api
+
+        def step_fn(params, opt_state, batch):
+            def lf(p):
+                return mapi.loss_fn(api, p, batch)
+            grads, metrics = jax.grad(lf, has_aux=True)(params)
+            grads = jax.lax.with_sharding_constraint(grads, self.p_shard)
+            lr = self._lr(opt_state.step)
+            new_p, new_o, om = adamw.update(
+                grads, opt_state, params, lr=lr,
+                weight_decay=tcfg.weight_decay,
+                max_grad_norm=tcfg.max_grad_norm)
+            metrics = dict(metrics)
+            metrics.update(om)
+            metrics["lr"] = lr
+            return new_p, new_o, metrics
+
+        return jax.jit(
+            step_fn,
+            in_shardings=(self.p_shard, self.o_shard, None),
+            out_shardings=(self.p_shard, self.o_shard, None),
+            donate_argnums=(0, 1),
+        )
+
+    # ------------------------------------------------------------------
+    def init_or_restore(self):
+        params = self.api.init(jax.random.PRNGKey(self.tcfg.seed))
+        params = jax.tree_util.tree_map(
+            lambda x, s: jax.device_put(x, s), params, self.p_shard)
+        opt = adamw.init(params)
+        start = 0
+        if self.tcfg.ckpt_dir and ckpt.latest_step(self.tcfg.ckpt_dir) is not None:
+            state = {"params": params, "opt": opt}
+            shardings = {"params": self.p_shard, "opt": self.o_shard}
+            state, meta = ckpt.restore(self.tcfg.ckpt_dir, state,
+                                       shardings=shardings)
+            params, opt = state["params"], state["opt"]
+            start = meta["step"]
+        return params, opt, start
+
+    def run(self) -> dict:
+        params, opt, start = self.init_or_restore()
+        history = []
+        t_last = time.time()
+        step = start
+        for step in range(start, self.tcfg.steps):
+            if self.preempt.should_stop():
+                break
+            batch = {k: jnp.asarray(v)
+                     for k, v in self.data.batch(step).items()}
+            params, opt, metrics = self._step_fn(params, opt, batch)
+            loss = float(metrics["loss"])
+            dt = time.time() - t_last
+            t_last = time.time()
+            self.watchdog.observe(step, dt)
+            history.append({"step": step, "loss": loss, "dt": dt})
+            if self.tcfg.ckpt_dir and (step + 1) % self.tcfg.ckpt_every == 0:
+                ckpt.save(self.tcfg.ckpt_dir, step + 1,
+                          {"params": params, "opt": opt},
+                          metadata={"arch": self.cfg.name},
+                          keep=self.tcfg.keep)
+            if (step + 1) % self.tcfg.log_every == 0:
+                print(f"step {step+1:5d}  loss {loss:.4f}  "
+                      f"lr {float(metrics['lr']):.2e}  {dt*1e3:.0f} ms",
+                      flush=True)
+        # final checkpoint on clean exit or preemption
+        if self.tcfg.ckpt_dir:
+            ckpt.save(self.tcfg.ckpt_dir, step + 1,
+                      {"params": params, "opt": opt},
+                      metadata={"arch": self.cfg.name}, keep=self.tcfg.keep)
+        return {"params": params, "opt": opt, "history": history,
+                "stopped_at": step + 1,
+                "stragglers": self.watchdog.flagged_steps}

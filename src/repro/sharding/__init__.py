@@ -1,0 +1,6 @@
+from repro.sharding.rules import (  # noqa: F401
+    batch_logical_axes,
+    cache_logical_axes,
+    spec_for,
+    tree_shardings,
+)

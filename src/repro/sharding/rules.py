@@ -1,0 +1,187 @@
+"""Logical-axis -> mesh-axis resolution (MaxText-style rule lists).
+
+A *ruleset* is an ordered list of (logical_axis, mesh_axes) pairs.  For
+each tensor we walk the rules in priority order and assign mesh axes to
+matching logical axes, subject to (a) each mesh axis used at most once
+per tensor and (b) divisibility of the dimension by the mesh-axis size.
+Failed assignments silently fall through — which implements e.g. the
+GQA fallback: ``kv_heads=8`` can't shard over model=16, so the later
+("head", "model") rule claims the head_dim instead.
+
+Modes:
+* ``train``  — FSDP(+pod) on ``embed``/params + TP on model axis; batch
+  over (pod, data).
+* ``serve``  — same TP; params FSDP'd (all-gathered per layer — the
+  memory/collective trade measured in §Roofline); KV caches sharded over
+  batch and heads/head_dim.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _fsdp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+# §Perf iteration A1 (EXPERIMENTS.md): shard the KV-cache *sequence* over
+# the model axis at serving time (flash-decoding/split-K analog).  The
+# baseline (False) shards kv_heads/head_dim instead, which forces partial
+# -sum all-reduces of full attention scores.  Kept toggleable so the
+# dry-run can measure both variants.
+SERVE_SEQ_SHARD = True
+
+# §Perf iteration A3: at serving time, keep weights TP-only (replicated
+# over the data axes) when they fit per-chip HBM, instead of ZeRO-style
+# FSDP.  FSDP at decode all-gathers every weight every token; TP-only
+# removes those collectives entirely at the cost of (params/model_axis)
+# resident bytes per chip.  The launcher flips this per-arch by the
+# fit test (grok-314B keeps FSDP; 14B-class serves TP-only).
+SERVE_PARAM_FSDP = True
+
+
+def set_serve_seq_shard(enable: bool) -> None:
+    global SERVE_SEQ_SHARD
+    SERVE_SEQ_SHARD = enable
+
+
+def set_serve_param_fsdp(enable: bool) -> None:
+    global SERVE_PARAM_FSDP
+    SERVE_PARAM_FSDP = enable
+
+
+# §Perf iteration B: context-parallel training — no tensor parallelism;
+# activations seq-shard over "model" (layers.CONTEXT_PARALLEL) and params
+# FSDP over every mesh axis (2-D ZeRO-3).
+TRAIN_CP = False
+
+
+def set_train_cp(enable: bool) -> None:
+    global TRAIN_CP
+    TRAIN_CP = enable
+
+
+def ruleset(mesh: Mesh, mode: str) -> list[tuple[str, tuple[str, ...]]]:
+    fsdp = _fsdp_axes(mesh)
+    serve_seq = mode == "serve" and SERVE_SEQ_SHARD
+    if TRAIN_CP:   # context-parallel: same placement for train + prefill
+        return [
+            ("batch", fsdp),
+            ("cache_batch", fsdp),
+            ("cache_seq", ("model",)),
+            ("vocab", ("model",)),          # keep vocab TP'd (logits/embed)
+            ("embed", fsdp + ("model",)),   # 2-D FSDP storage
+            ("act_seq", ("model",)),
+        ]
+    rules = [
+        ("batch", fsdp),
+        ("cache_batch", fsdp),
+        ("expert_capacity", fsdp),
+        # split-K cache sharding claims the model axis ahead of heads
+        ("cache_seq", ("model",) if serve_seq else
+         (fsdp if mode == "serve" else ())),
+        ("vocab", ("model",)),
+        ("experts", ("model",)),
+        ("heads", ("model",)),
+        ("kv_heads", ("model",)),
+        ("heads_mix", ("model",)),
+        ("mlp", ("model",)),
+        ("head", ("model",)),
+        ("rwkv_k", ("model",)),
+        # FSDP / ZeRO-3 on params (optionally off at serve, §Perf A3)
+        ("embed", fsdp if (mode != "serve" or SERVE_PARAM_FSDP) else ()),
+        ("act_seq", ()),
+    ]
+    return [(k, v) for k, v in rules if v]
+
+
+def spec_for(
+    shape: tuple[int, ...],
+    axes: tuple[str | None, ...],
+    mesh: Mesh,
+    mode: str = "train",
+    min_shard_rank: int = 1,
+) -> P:
+    """Resolve one tensor's logical axes to a PartitionSpec."""
+    if len(shape) < min_shard_rank:
+        return P()
+    assignment: list[tuple[str, ...] | None] = [None] * len(shape)
+    used: set[str] = set()
+    for logical, mesh_axes in ruleset(mesh, mode):
+        for dim, ax in enumerate(axes):
+            if ax != logical or assignment[dim] is not None:
+                continue
+            take = [m for m in mesh_axes if m not in used]
+            size = 1
+            chosen = []
+            for m in take:
+                if shape[dim] % (size * mesh.shape[m]) == 0:
+                    chosen.append(m)
+                    size *= mesh.shape[m]
+            if chosen:
+                assignment[dim] = tuple(chosen)
+                used.update(chosen)
+    return P(*[a if a else None for a in assignment])
+
+
+def tree_shardings(abstract_tree, axes_tree, mesh: Mesh, mode: str = "train",
+                   params_rank_gate: bool = True):
+    """NamedSharding tree for an abstract (ShapeDtypeStruct) tree.
+
+    ``params_rank_gate``: replicate rank-0/1 tensors (norm scales,
+    biases) instead of generating many tiny all-gathers.
+    """
+    def leaf(ab, axes):
+        if axes is None:
+            return NamedSharding(mesh, P())
+        gate = 2 if params_rank_gate else 1
+        return NamedSharding(
+            mesh, spec_for(ab.shape, axes, mesh, mode, min_shard_rank=gate))
+
+    return jax.tree_util.tree_map(leaf, abstract_tree, axes_tree)
+
+
+# ------------------------------------------------------------------------
+# Cache logical axes: pattern-matched on leaf path/rank so every model
+# family's cache tree gets coherent shardings without per-model tables.
+# ------------------------------------------------------------------------
+
+def _cache_leaf_axes(path: tuple, leaf) -> tuple | None:
+    name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+    nd = len(leaf.shape)
+    if name in ("k", "v", "xk", "xv"):
+        if nd == 5:   # [layers, B, S, kv, hd]
+            return ("layers", "cache_batch", "cache_seq", "kv_heads", "head")
+        if nd == 4:   # window ring [B, W, kv, hd]
+            return ("cache_batch", "cache_seq", "kv_heads", "head")
+    if name == "kpos":
+        return (None,) * nd
+    if name == "wkv":      # [layers, B, H, K, V]
+        return ("layers", "cache_batch", "rwkv_heads", "rwkv_k", None)
+    if name in ("tshift_t", "tshift_c"):   # [layers, B, D]
+        return ("layers", "cache_batch", "embed")
+    if name == "conv":     # [B, W-1, Dr]
+        return ("cache_batch", None, "mlp")
+    if name == "h":        # [B, Dr]
+        return ("cache_batch", "mlp")
+    if name == "pos":
+        return ()
+    return (None,) * nd
+
+
+def cache_logical_axes(abstract_cache):
+    return jax.tree_util.tree_map_with_path(
+        _cache_leaf_axes, abstract_cache)
+
+
+def batch_logical_axes(abstract_batch):
+    def leaf(path, ab):
+        nd = len(ab.shape)
+        if nd >= 1:
+            return ("batch",) + (None,) * (nd - 1)
+        return ()
+    return jax.tree_util.tree_map_with_path(leaf, abstract_batch)

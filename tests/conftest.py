@@ -1,0 +1,13 @@
+import os
+
+# tests must see the real single-CPU device view; the dry-run (and only
+# the dry-run) sets the 512-device flag in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,148 @@
+"""Unit tests for the dry-run instrumentation itself: the HLO collective
+parser, the depth extrapolation, and the analytic memory model pieces
+that don't need 512 devices."""
+
+import re
+
+import pytest
+
+# import the parsing helpers without triggering the module's XLA_FLAGS
+# side effect: replicate the tiny pure functions against the same regexes
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "u8": 1, "pred": 1, "s32": 4}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(m):
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %ag = f32[16,1024]{1,0} all-gather(%p0), replica_groups=[16]<=[16]
+  %ar = (f32[128]{0}, bf16[256,256]{1,0}) all-reduce(%a, %b), channel_id=1
+  %rs = f32[64]{0} reduce-scatter(%c), dimensions={0}
+  %cp = u8[512]{0} collective-permute(%d), source_target_pairs={{0,1}}
+  %ard = f32[8]{0} all-reduce-done(%ars)
+  %fuse = f32[4]{0} fusion(%all-reduce.3), kind=kLoop
+}
+"""
+
+
+class TestCollectiveParser:
+    def test_result_bytes_counted(self):
+        # all-gather result: 16*1024*4 = 65536
+        m = _SHAPE_RE.search("f32[16,1024]")
+        assert _shape_bytes(m) == 65536
+
+    def test_tuple_results_summed(self):
+        text = "(f32[128]{0}, bf16[256,256]{1,0})"
+        total = sum(_shape_bytes(x) for x in _SHAPE_RE.finditer(text))
+        assert total == 128 * 4 + 256 * 256 * 2
+
+    def test_real_parser_on_sample(self):
+        import importlib.util, pathlib, os
+        # load dryrun with the flag already set in THIS process? no —
+        # parse with a fresh regex copy equal to the module's
+        kinds = ("all-gather", "all-reduce", "reduce-scatter",
+                 "all-to-all", "collective-permute")
+        found = {}
+        for line in HLO_SAMPLE.splitlines():
+            ls = line.strip()
+            m = re.search(
+                r"=\s+((?:\([^)]*\)|[\w\[\],{}: ])*?)\s*(" +
+                "|".join(kinds) + r")(?:-start|-done)?\((.*)$", ls)
+            if not m:
+                continue
+            result_part, kind, _ = m.groups()
+            if f"{kind}-done" in ls:
+                continue
+            rb = sum(_shape_bytes(x) for x in _SHAPE_RE.finditer(result_part))
+            found[kind] = found.get(kind, 0) + rb
+        assert found["all-gather"] == 65536
+        assert found["all-reduce"] == 128 * 4 + 256 * 256 * 2
+        assert found["reduce-scatter"] == 256
+        assert found["collective-permute"] == 512
+        # -done lines and operand mentions are not double counted
+        assert sum(found.values()) == 65536 + 512 + 131584 + 256
+
+
+class TestDepthExtrapolation:
+    def _extrap(self, m1, m2, units):
+        d = m2 - m1
+        if d < 0:
+            return m2 * (units / 2.0)
+        return m1 + d * (units - 1.0)
+
+    def test_linear_case(self):
+        # fixed 10 + 3/layer, measured at 1 and 2 layers
+        assert self._extrap(13.0, 16.0, 40) == 13 + 3 * 39
+
+    def test_negative_delta_falls_back(self):
+        # L=1 compiled worse than L=2: use per-layer avg of L=2
+        assert self._extrap(11.1e9, 5.4e9, 48) == pytest.approx(
+            5.4e9 * 24)
+
+
+class TestSchedules:
+    def test_wsd_shape(self):
+        import numpy as np
+        from repro.optim.schedule import wsd
+
+        lrs = [float(wsd(s, 1e-3, warmup=10, total=100)) for s in range(101)]
+        assert lrs[0] == 0.0
+        assert lrs[10] == pytest.approx(1e-3)
+        # stable plateau
+        assert all(abs(l - 1e-3) < 1e-9 for l in lrs[10:89])
+        # decay tail monotone down
+        tail = lrs[90:]
+        assert all(a >= b for a, b in zip(tail, tail[1:]))
+        assert tail[-1] < 1e-4
+
+    def test_cosine_monotone_after_warmup(self):
+        from repro.optim.schedule import cosine
+
+        lrs = [float(cosine(s, 1e-3, warmup=5, total=50)) for s in range(51)]
+        assert lrs[5] == pytest.approx(1e-3)
+        assert all(a >= b - 1e-12 for a, b in zip(lrs[5:], lrs[6:]))
+        assert lrs[-1] == pytest.approx(1e-4, rel=0.01)
+
+
+class TestPimScaling:
+    """Properties of the Lama cost model beyond the Table V point."""
+
+    def test_act_count_scales_with_batches_not_ops(self):
+        from repro.core.pim import lama_bulk_cost
+
+        assert lama_bulk_cost(1024, 8, num_scalars=4).counts.act == 8
+        assert lama_bulk_cost(4096, 8, num_scalars=4).counts.act == 8
+        assert lama_bulk_cost(1024, 8, num_scalars=8).counts.act == 16
+
+    def test_energy_grows_sublinearly_with_precision(self):
+        """4->8 bit: the LUT grows 16x but Lama's energy grows <6x
+        (reads constant, only retrievals scale), and the absolute
+        advantage over pLUTo holds at both precisions."""
+        from repro.core.pim import lama_bulk_cost, pluto_bulk_cost
+
+        l4, l8 = lama_bulk_cost(1024, 4), lama_bulk_cost(1024, 8)
+        p4, p8 = pluto_bulk_cost(1024, 4), pluto_bulk_cost(1024, 8)
+        assert l8.energy_nj / l4.energy_nj < 6.0
+        assert p4.energy_nj / l4.energy_nj > 8.0
+        assert p8.energy_nj / l8.energy_nj > 8.0
+
+    def test_latency_scales_sublinearly_in_ops(self):
+        """4x the ops in the same coalesced batches costs <4x latency:
+        the single-ACT-per-batch setup amortizes (the paper's open-page
+        mechanism), leaving only the ICA term to scale."""
+        from repro.core.pim import lama_bulk_cost
+
+        a = lama_bulk_cost(1024, 4)
+        b = lama_bulk_cost(4096, 4)
+        assert b.counts.act == a.counts.act          # ACTs amortized
+        assert 2.0 < b.latency_ns / a.latency_ns < 4.0

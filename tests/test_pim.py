@@ -1,0 +1,148 @@
+"""PIM instrument vs the paper's own numbers (Table V, Table IV,
+Figs 12-13, §I claims)."""
+
+import statistics as st
+
+import pytest
+
+from repro.core.lut import lama_parallelism
+from repro.core.pim import (
+    cpu_bulk_cost,
+    fig12_table,
+    fig13_table,
+    lama_area_overhead,
+    lama_bulk_cost,
+    lama_command_reduction_vs_pluto,
+    pluto_bulk_cost,
+    simdram_bulk_cost,
+)
+from repro.core.pim.simdram import simdram_mul_aaps
+
+TABLE_V = {
+    4: {
+        "lama": dict(lat=583, e=25.8, act=8, cmd=112),
+        "pluto": dict(lat=2240, e=247.4, act=1088, cmd=2176),
+        "simdram": dict(lat=7964, e=151.23, act=310, cmd=465),
+    },
+    8: {
+        "lama": dict(lat=2534, e=118.8, act=8, cmd=592),
+        "pluto": dict(lat=8963, e=989.7, act=4352, cmd=8704),
+        "simdram": dict(lat=34065, e=646.9, act=1326, cmd=1989),
+    },
+}
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+class TestTableV:
+    def test_command_counts_exact(self, bits):
+        """Command counts derive from the mechanism with no calibration —
+        they must match the paper exactly."""
+        for fn, key in ((lama_bulk_cost, "lama"), (pluto_bulk_cost, "pluto"),
+                        (simdram_bulk_cost, "simdram")):
+            r = fn(1024, bits)
+            assert r.counts.act == TABLE_V[bits][key]["act"], key
+            assert r.counts.total == TABLE_V[bits][key]["cmd"], key
+
+    def test_latency_within_half_percent(self, bits):
+        for fn, key in ((lama_bulk_cost, "lama"), (pluto_bulk_cost, "pluto"),
+                        (simdram_bulk_cost, "simdram")):
+            r = fn(1024, bits)
+            paper = TABLE_V[bits][key]["lat"]
+            assert abs(r.latency_ns - paper) / paper < 0.005, (key, r.latency_ns)
+
+    def test_energy_within_half_percent(self, bits):
+        for fn, key in ((lama_bulk_cost, "lama"), (pluto_bulk_cost, "pluto"),
+                        (simdram_bulk_cost, "simdram")):
+            r = fn(1024, bits)
+            paper = TABLE_V[bits][key]["e"]
+            assert abs(r.energy_nj - paper) / paper < 0.005, (key, r.energy_nj)
+
+
+class TestHeadlineClaims:
+    def test_act_count_precision_independent(self):
+        """'Lama requires the same ACT command count' as precision grows."""
+        assert lama_bulk_cost(1024, 4).counts.act == \
+            lama_bulk_cost(1024, 8).counts.act == 8
+
+    def test_command_reduction_19_4x(self):
+        assert abs(lama_command_reduction_vs_pluto() - 19.4) < 0.1
+
+    def test_speedup_vs_pluto(self):
+        s4 = pluto_bulk_cost(1024, 4).latency_ns / lama_bulk_cost(1024, 4).latency_ns
+        s8 = pluto_bulk_cost(1024, 8).latency_ns / lama_bulk_cost(1024, 8).latency_ns
+        assert abs(s4 - 3.8) < 0.2   # paper: 3.8x (4-bit)
+        assert abs(s8 - 3.5) < 0.2   # paper: 3.5x (8-bit)
+
+    def test_energy_vs_pluto(self):
+        e4 = pluto_bulk_cost(1024, 4).energy_nj / lama_bulk_cost(1024, 4).energy_nj
+        e8 = pluto_bulk_cost(1024, 8).energy_nj / lama_bulk_cost(1024, 8).energy_nj
+        assert abs(e4 - 9.6) < 0.4   # paper: 9.6x
+        assert abs(e8 - 8.3) < 0.4   # paper: 8.3x
+
+    def test_vs_cpu_int8(self):
+        cpu = cpu_bulk_cost(1024)
+        lama = lama_bulk_cost(1024, 8)
+        assert abs(cpu.latency_ns / lama.latency_ns - 3.8) < 0.2
+        # NOTE: the paper *text* claims 8x energy savings vs CPU, but its
+        # own Table V numbers give 7900/118.8 = 66.5x — an internal
+        # inconsistency of the paper.  We assert the table-derived ratio.
+        assert abs(cpu.energy_nj / lama.energy_nj - 66.5) < 2.0
+
+    def test_simdram_ratios(self):
+        s = simdram_bulk_cost(1024, 4)
+        l = lama_bulk_cost(1024, 4)
+        assert abs(s.latency_ns / l.latency_ns - 13.7) < 0.5  # paper 13.7x
+        assert abs(s.energy_nj / l.energy_nj - 5.8) < 0.3     # paper 5.8x
+
+
+class TestStructure:
+    def test_simdram_aap_formula(self):
+        assert simdram_mul_aaps(4) == 155
+        assert simdram_mul_aaps(8) == 663
+
+    def test_parallelism_table(self):
+        assert [lama_parallelism(b) for b in (4, 5, 6, 7, 8)] == \
+            [16, 16, 8, 4, 2]
+
+    def test_area_overhead(self):
+        rep = lama_area_overhead()
+        assert abs(rep.total_mm2 - 1.32) < 0.02
+        assert abs(rep.overhead_pct - 2.47) < 0.05
+
+
+class TestLamaAccel:
+    def test_fig12_anchors_and_averages(self):
+        rows = {r["workload"]: r for r in fig12_table()}
+        assert abs(rows["BERT-SQuAD1"]["lama_speedup_vs_tpu"] - 3.4) < 0.05
+        assert abs(rows["BERT-SST2"]["lama_speedup_vs_tpu"] - 4.7) < 0.15
+        avg_s = st.mean(r["lama_speedup_vs_tpu"] for r in rows.values())
+        avg_e = st.mean(r["lama_energy_saving_vs_tpu"] for r in rows.values())
+        assert abs(avg_s - 4.1) / 4.1 < 0.15      # paper 4.1x
+        assert abs(avg_e - 7.1) / 7.1 < 0.25      # paper 7.1x
+        # BART-CNN stated explicitly: 3.6x
+        assert abs(rows["BART-CNN-DM"]["lama_speedup_vs_tpu"] - 3.6) < 0.4
+
+    def test_fig12_bits_trend(self):
+        """Lower average bitwidth -> higher energy saving (paper §V-E)."""
+        rows = sorted(fig12_table(), key=lambda r: r["avg_bits"])
+        savings = [r["lama_energy_saving_vs_tpu"] for r in rows]
+        assert savings[0] == max(savings)          # SST2, 3.48 bits
+        assert savings[-1] == min(savings)         # SQuAD, 6.45 bits
+
+    def test_fig12_pluto_deficit(self):
+        rows = fig12_table()
+        spd = st.mean(r["lama_speedup_vs_tpu"] / r["pluto_speedup_vs_tpu"]
+                      for r in rows)
+        en = st.mean(r["lama_energy_saving_vs_tpu"] /
+                     r["pluto_energy_saving_vs_tpu"] for r in rows)
+        assert abs(spd - 1.7) < 0.2               # paper 1.7x
+        assert abs(en - 4.0) < 0.6                # paper 4x
+
+    def test_fig13_vs_gpu(self):
+        rows = fig13_table()
+        ppa = st.mean(r["perf_per_area_vs_gpu"] for r in rows)
+        en = st.mean(r["energy_saving_vs_gpu"] for r in rows)
+        assert abs(ppa - 7.2) / 7.2 < 0.25        # paper 7.2x
+        assert 6.0 < en < 20.0                    # paper: 6.1-19.2x band
+        # raw throughput below GPU on average (paper §V-E)
+        assert st.mean(r["raw_speedup_vs_gpu"] for r in rows) < 1.0

@@ -1,0 +1,92 @@
+"""Sharding rule engine: divisibility fallbacks, per-tensor mesh-axis
+uniqueness, cache/batch axes (single-process CPU mesh stand-ins)."""
+
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules as R
+
+
+class FakeMesh:
+    """Duck-typed mesh: rules only need .shape (dict) and sizes."""
+
+    def __init__(self, shape: dict):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+        self.size = int(np.prod(list(shape.values())))
+
+
+SINGLE = FakeMesh({"data": 16, "model": 16})
+MULTI = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+class TestSpecResolution:
+    def test_mlp_weight_fsdp_plus_tp(self):
+        spec = R.spec_for((2048, 8192), ("embed", "mlp"), SINGLE, "train")
+        assert spec == P(("data",), ("model",))
+
+    def test_multi_pod_fsdp_uses_both_axes(self):
+        spec = R.spec_for((2048, 8192), ("embed", "mlp"), MULTI, "train")
+        assert spec == P(("pod", "data"), ("model",))
+
+    def test_gqa_fallback_to_head_dim(self):
+        """kv_heads=8 can't shard over model=16 -> head_dim takes it."""
+        spec = R.spec_for((5120, 8, 128), ("embed", "kv_heads", "head"),
+                          SINGLE, "train")
+        assert spec == P(("data",), None, ("model",))
+
+    def test_divisible_heads_take_model(self):
+        spec = R.spec_for((6144, 48, 128), ("embed", "heads", "head"),
+                          SINGLE, "train")
+        assert spec == P(("data",), ("model",), None)
+
+    def test_expert_fallback_to_mlp(self):
+        """grok: 8 experts can't shard over model=16 -> TP inside expert."""
+        spec = R.spec_for((8, 6144, 32768), ("experts", "embed", "mlp"),
+                          SINGLE, "train")
+        assert spec == P(None, ("data",), ("model",))
+
+    def test_expert_parallel_when_divisible(self):
+        spec = R.spec_for((16, 5120, 8192), ("experts", "embed", "mlp"),
+                          SINGLE, "train")
+        assert spec == P(("model",), ("data",), None)
+
+    def test_mesh_axis_never_reused_within_tensor(self):
+        spec = R.spec_for((2048, 2048), ("mlp", "mlp2"), SINGLE, "train")
+        flat = [a for part in spec if part for a in
+                (part if isinstance(part, tuple) else (part,))]
+        assert len(flat) == len(set(flat))
+
+    def test_non_divisible_dim_left_unsharded(self):
+        spec = R.spec_for((7, 100), ("batch", "embed"), SINGLE, "train")
+        assert spec == P(None, None)  # 7 % 16 != 0, 100 % 16 != 0
+
+    def test_rank1_gated(self):
+        spec = R.spec_for((2048,), ("embed",), SINGLE, "train",
+                          min_shard_rank=2)
+        assert spec == P()
+
+
+class TestCacheAxes:
+    def test_kv_cache_axes(self):
+        cache = {
+            "k": jax.ShapeDtypeStruct((16, 128, 1024, 8, 128), "bfloat16"),
+            "pos": jax.ShapeDtypeStruct((), "int32"),
+        }
+        axes = R.cache_logical_axes(cache)
+        assert axes["k"] == ("layers", "cache_batch", "cache_seq",
+                             "kv_heads", "head")
+        assert axes["pos"] == ()
+
+    def test_rwkv_state_axes(self):
+        cache = {"wkv": jax.ShapeDtypeStruct((32, 1, 40, 64, 64), "float32")}
+        axes = R.cache_logical_axes(cache)
+        assert axes["wkv"] == ("layers", "cache_batch", "rwkv_heads",
+                               "rwkv_k", None)
+
+    def test_batch_axes(self):
+        batch = {"tokens": jax.ShapeDtypeStruct((256, 4096), "int32")}
+        axes = R.batch_logical_axes(batch)
+        assert axes["tokens"] == ("batch", None)

@@ -1,0 +1,66 @@
+"""End-to-end behaviour: train a tiny LM until the loss falls, serve it
+with batched requests (fp and Lama-quantized), and check the quantized
+server agrees with the fp server on most tokens — the system-level
+version of the paper's <1% accuracy claim."""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.runtime.server import InferenceServer, Request
+from repro.runtime.trainer import TrainConfig, Trainer
+
+
+@pytest.fixture(scope="module")
+def trained(tmp_path_factory):
+    cfg = get_config("olmo-1b", tiny=True)
+    tcfg = TrainConfig(steps=60, global_batch=8, seq_len=64, lr=2e-3,
+                       ckpt_dir=str(tmp_path_factory.mktemp("ck")),
+                       ckpt_every=30, log_every=10 ** 9)
+    out = Trainer(cfg, tcfg).run()
+    return cfg, out
+
+
+def test_training_learns(trained):
+    _, out = trained
+    h = out["history"]
+    first = np.mean([x["loss"] for x in h[:5]])
+    last = np.mean([x["loss"] for x in h[-5:]])
+    assert last < first - 0.1, (first, last)
+
+
+def test_serve_batched_requests(trained):
+    cfg, out = trained
+    server = InferenceServer(cfg, params=out["params"], max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 12).astype(np.int32),
+                    max_new_tokens=6) for i in range(6)]
+    # mixed prompt lengths exercise the bucketing path
+    reqs.append(Request(6, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                        max_new_tokens=6))
+    outs = server.generate(reqs)
+    assert [c.uid for c in outs] == list(range(7))
+    assert all(len(c.tokens) == 6 for c in outs)
+
+
+def test_quantized_server_agrees_with_fp(trained):
+    """Logit-level fidelity of the quantized server (greedy token paths
+    compound a single early divergence, so the stable check is on the
+    logits the two servers produce for identical inputs)."""
+    import jax.numpy as jnp
+    from repro.models import api as mapi
+
+    cfg, out = trained
+    fp = InferenceServer(cfg, params=out["params"], max_len=48)
+    q = InferenceServer(cfg, params=out["params"], quant_bits=7, max_len=48)
+    rng = np.random.default_rng(1)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (4, 16)), jnp.int32)
+    api = mapi.get_model(cfg)
+    ref, _ = api.forward(fp.params, toks, cfg)
+    got, _ = api.forward(q.params, toks, cfg)
+    rel = float(jnp.sqrt(jnp.mean((got - ref) ** 2)) /
+                (jnp.std(ref) + 1e-9))
+    assert rel < 0.35, rel
+    agree = float(jnp.mean(
+        (jnp.argmax(got, -1) == jnp.argmax(ref, -1)).astype(jnp.float32)))
+    assert agree > 0.5, agree
