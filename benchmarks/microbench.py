@@ -1,10 +1,19 @@
 """Wall-clock microbenchmarks of the core ops on this host (CPU):
 quantize / encode / decode / counting / kernel-interpret paths.
 These give the us_per_call numbers real meaning on the machine the
-harness runs on (TPU numbers come from the roofline analysis)."""
+harness runs on (TPU numbers come from the roofline analysis).
+
+``python benchmarks/microbench.py [out.json]`` additionally times the
+fused-vs-materialized quantized matmul (2-D and the attention-projection
+``bsd,dnh->bsnh`` spec) and quantized-KV flash decode, and writes the
+rows to ``BENCH_kernels.json`` — the start of the per-PR kernel perf
+trajectory.
+"""
 
 from __future__ import annotations
 
+import json
+import sys
 import time
 
 import jax
@@ -52,3 +61,94 @@ def rows() -> list[dict]:
          "derived": "baseline"},
     ]
     return out
+
+
+# ---------------------------------------------------------------------
+# Fused-vs-materialized kernel rows (BENCH_kernels.json)
+# ---------------------------------------------------------------------
+
+def kernel_rows(iters: int = 10) -> list[dict]:
+    """Fused LUT-dequant kernel vs the materialize+einsum path, on the
+    shapes serving actually runs: a 2-D MLP-style matmul, the
+    ``bsd,dnh->bsnh`` attention projection, the gated-MLP front half,
+    and one quantized-KV flash-decode step."""
+    from repro.core import lama_layers as ll
+
+    r = np.random.default_rng(1)
+    rows: list[dict] = []
+
+    def quantize(shape):
+        w = jnp.asarray(r.normal(size=shape) * 0.05, jnp.float32)
+        codes, qp = eq.quantize(w.reshape(shape[0], -1), 6)
+        return eq.pack_qtensor(codes.reshape(shape), qp)
+
+    def bench_pair(name, fn, *args):
+        fused = jax.jit(lambda *a: fn(*a))
+        with ll.policy(mode="materialize"):
+            # trace-time policy capture: jit once per policy
+            mat = jax.jit(lambda *a: fn(*a))
+            t_mat = _time(mat, *args, iters=iters)
+        t_fused = _time(fused, *args, iters=iters)
+        rows.append({"name": f"kernels/{name}_fused",
+                     "us_per_call": t_fused,
+                     "derived": "fused LUT-dequant Pallas (interpret on CPU)"})
+        rows.append({"name": f"kernels/{name}_materialized",
+                     "us_per_call": t_mat,
+                     "derived": "decode to HBM + einsum baseline"})
+
+    # 2-D dense: [256, 512] @ [512, 512]
+    w2d = quantize((512, 512))
+    x2d = jnp.asarray(r.normal(size=(256, 512)), jnp.float32)
+    bench_pair("dense_2d_256x512x512",
+               lambda a: ll.dense(a, w2d, dtype=jnp.float32), x2d)
+
+    # attention projection spec: [4, 64, 256] x [256, 8, 32]
+    wqkv = quantize((256, 8, 32))
+    xb = jnp.asarray(r.normal(size=(4, 64, 256)), jnp.float32)
+    bench_pair("proj_bsd_dnh_4x64x256x8x32",
+               lambda a: ll.dense_general(a, wqkv, "bsd,dnh->bsnh",
+                                          dtype=jnp.float32), xb)
+
+    # gated MLP front half: one dual-matmul kernel vs 3 ops
+    wg, wu = quantize((256, 512)), quantize((256, 512))
+    xg = jnp.asarray(r.normal(size=(128, 256)), jnp.float32)
+    bench_pair("gated_mlp_128x256x512",
+               lambda a: ll.gated_mlp(a, wg, wu, "silu", dtype=jnp.float32),
+               xg)
+
+    # quantized-KV flash decode: f8 cache bytes cross HBM, dequant
+    # in-kernel — vs the dense masked attend over an upcast cache.
+    from repro.kernels.decode_gqa import decode_gqa, decode_gqa_ref
+
+    b, s, nkv, g, hd = 4, 1024, 4, 2, 64
+    q = jnp.asarray(r.normal(size=(b, nkv, g, hd)), jnp.float32)
+    k8 = jnp.asarray(r.normal(size=(b, s, nkv, hd)) * 0.3,
+                     jnp.float32).astype(jnp.float8_e4m3fn)
+    v8 = jnp.asarray(r.normal(size=(b, s, nkv, hd)) * 0.3,
+                     jnp.float32).astype(jnp.float8_e4m3fn)
+    lens = jnp.asarray([s, s // 2, s // 3, s // 4], jnp.int32)
+    rows.append({"name": "kernels/decode_gqa_f8kv_b4_s1024",
+                 "us_per_call": _time(
+                     jax.jit(lambda *a: decode_gqa(*a)), q, k8, v8, lens,
+                     iters=iters),
+                 "derived": "flash decode, in-kernel f8 dequant"})
+    rows.append({"name": "kernels/decode_gqa_f8kv_b4_s1024_ref",
+                 "us_per_call": _time(
+                     jax.jit(lambda *a: decode_gqa_ref(*a)), q, k8, v8, lens,
+                     iters=iters),
+                 "derived": "dense masked attend on upcast cache"})
+    return rows
+
+
+def main(out_path: str = "BENCH_kernels.json") -> None:
+    out = {"host_backend": jax.default_backend(),
+           "rows": kernel_rows()}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    for row in out["rows"]:
+        print(f"{row['name']},{row['us_per_call']:.2f},{row['derived']}")
+    print(f"wrote {out_path} ({len(out['rows'])} rows)")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:2])

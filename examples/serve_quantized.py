@@ -49,6 +49,15 @@ def main():
                         for r in reqs])
     q_dt = time.time() - t0
 
+    # narrow-byte KV cache: f8e4m3fn stored in HBM, dequantized inside
+    # the decode_gqa kernel after the DMA (weights also served as codes)
+    q8 = InferenceServer(cfg, params=fp.params, quant_bits=7, max_len=64,
+                         kv_dtype="float8_e4m3fn")
+    q8_out = q8.generate([Request(r.uid, r.prompt, r.max_new_tokens)
+                          for r in reqs])
+    agree8 = np.mean([np.mean(a.tokens == b.tokens)
+                      for a, b in zip(q_out, q8_out)])
+
     toks = sum(len(c.tokens) for c in fp_out)
     agree = np.mean([np.mean(a.tokens == b.tokens)
                      for a, b in zip(fp_out, q_out)])
@@ -59,6 +68,7 @@ def main():
     print(f"lama-7b codes: {qb/1e6:7.2f} MB   {toks/q_dt:6.1f} tok/s   "
           f"({fpb/qb:.2f}x smaller)")
     print(f"token agreement fp vs quantized: {agree:.2%}")
+    print(f"token agreement fp32-KV vs f8e4m3fn-KV (quantized): {agree8:.2%}")
     import statistics as stt
     bits = [b for b, _ in q.quant_report.values()]
     print(f"quantized {len(bits)} weight tensors at {stt.mean(bits):.0f} "

@@ -9,28 +9,86 @@ Every matmul in the model zoo funnels through :func:`dense` /
   produced by :func:`quantize_tree` — codes live in HBM (1 B/param), the
   256-entry decode LUT is the VMEM-resident "open row".
 
-Dequantization happens at the matmul site (fused into the Pallas kernel
-on TPU; pure gather+matmul under jit elsewhere), so the full-precision
-weight never round-trips through HBM.
+**Fused is the default execution path** (this is the paper's whole
+premise — never materialize the wide operand): any einsum spec the zoo
+uses is canonicalized to a 2-D ``[M, K] @ [K, N]`` (codes reshaped /
+byte-transposed, never decoded) and dispatched to the fused Pallas
+kernel, with batched specs vmapped over the kernel.  A
+:class:`FusedPolicy` (context-scoped) replaces the old module-global
+kernel switch: it picks fused vs. materialize per call, selects the
+decode mode, and controls epilogue fusion and the flash-decode
+attention kernel.  Specs the canonicalizer cannot express (repeated
+labels, diagonal-style contractions) fall back to materialize+einsum.
 """
 
 from __future__ import annotations
 
-from typing import Callable
+import contextlib
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import exponential_quant as eq
 
-# Toggled by ops layer when the Pallas kernel should be used. Kept as a
-# module switch so models stay oblivious.
-_USE_PALLAS_KERNEL = False
+
+# ----------------------------------------------------------------------
+# Execution policy
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FusedPolicy:
+    """Per-context policy for quantized matmul execution.
+
+    mode:
+      * ``"auto"``  — fused kernel wherever the spec canonicalizes (the
+        default; interpret-mode on CPU so behaviour is uniform).
+      * ``"fused"`` — synonym of auto kept for explicit opt-in call
+        sites (scripts/tests that want to state intent).
+      * ``"materialize"`` — legacy decode-to-HBM path everywhere.
+    """
+
+    mode: str = "auto"              # auto | fused | materialize
+    decode_mode: str = "gather"     # gather | alu
+    fuse_epilogues: bool = True     # act/bias/gate epilogues in-kernel
+    flash_decode: bool = True       # decode_gqa kernel in decode_step
+    autotune: bool | None = None    # None = only on real TPU
+
+
+_POLICY = FusedPolicy()
+
+
+def get_policy() -> FusedPolicy:
+    return _POLICY
+
+
+def set_policy(p: FusedPolicy) -> None:
+    global _POLICY
+    _POLICY = p
+
+
+@contextlib.contextmanager
+def policy(**overrides):
+    """Scoped policy override: ``with ll.policy(mode="materialize"): ...``"""
+    global _POLICY
+    prev = _POLICY
+    _POLICY = dataclasses.replace(prev, **overrides)
+    try:
+        yield _POLICY
+    finally:
+        _POLICY = prev
 
 
 def use_pallas_kernel(enable: bool = True) -> None:
-    global _USE_PALLAS_KERNEL
-    _USE_PALLAS_KERNEL = enable
+    """Legacy switch (pre-policy API): kept for callers/scripts."""
+    set_policy(dataclasses.replace(
+        _POLICY, mode="fused" if enable else "materialize"))
+
+
+def _fused_enabled() -> bool:
+    return _POLICY.mode in ("auto", "fused")
 
 
 def materialize(w, dtype=jnp.bfloat16) -> jax.Array:
@@ -40,32 +98,214 @@ def materialize(w, dtype=jnp.bfloat16) -> jax.Array:
     return w.astype(dtype)
 
 
-def dense(x: jax.Array, w, *, dtype=None) -> jax.Array:
+# ----------------------------------------------------------------------
+# Einsum canonicalization: spec -> 2-D (optionally batched) matmul plan
+# ----------------------------------------------------------------------
+
+class _EinsumPlan(NamedTuple):
+    """Label-level plan turning ``einsum(spec, x, w)`` into
+    ``[B?, M, K] @ [B?, K, N]`` with reshapes/transposes only (codes are
+    moved as bytes, never decoded)."""
+
+    batch: tuple[str, ...]     # labels shared by x, w and out
+    xfree: tuple[str, ...]     # labels of M (x and out only)
+    contract: tuple[str, ...]  # labels of K (x and w, not out)
+    wfree: tuple[str, ...]     # labels of N (w and out only)
+    x_perm: tuple[int, ...]    # x transpose -> (batch, xfree, contract)
+    w_perm: tuple[int, ...]    # w transpose -> (batch, contract, wfree)
+    out_perm: tuple[int, ...]  # (batch, xfree, wfree) -> out label order
+
+
+@functools.lru_cache(maxsize=None)
+def _einsum_plan(spec: str) -> _EinsumPlan | None:
+    """Parse a two-operand einsum spec into a matmul plan, or None when
+    the spec is not expressible as (batched) ``x @ w``."""
+    try:
+        operands, out = spec.replace(" ", "").split("->")
+        xs, ws = operands.split(",")
+    except ValueError:
+        return None
+    if "." in spec:
+        return None
+    if len(set(xs)) != len(xs) or len(set(ws)) != len(ws) \
+            or len(set(out)) != len(out):
+        return None
+    batch = tuple(l for l in xs if l in ws and l in out)
+    contract = tuple(l for l in xs if l in ws and l not in out)
+    xfree = tuple(l for l in xs if l not in ws)
+    wfree = tuple(l for l in ws if l not in xs)
+    if set(xfree) - set(out) or set(wfree) - set(out):
+        return None                   # summed-out free label
+    if set(out) != set(batch) | set(xfree) | set(wfree):
+        return None
+    canonical = batch + xfree + wfree
+    return _EinsumPlan(
+        batch=batch, xfree=xfree, contract=contract, wfree=wfree,
+        x_perm=tuple(xs.index(l) for l in batch + xfree + contract),
+        w_perm=tuple(ws.index(l) for l in batch + contract + wfree),
+        out_perm=tuple(canonical.index(l) for l in out),
+    )
+
+
+def _maybe_transpose(a: jax.Array, perm: tuple[int, ...]) -> jax.Array:
+    if perm == tuple(range(a.ndim)):
+        return a
+    return jnp.transpose(a, perm)
+
+
+def _prod(dims) -> int:
+    out = 1
+    for d in dims:
+        out *= int(d)
+    return out
+
+
+def _fused_einsum(x: jax.Array, w: dict, plan: _EinsumPlan, spec: str,
+                  cdtype) -> jax.Array:
+    """Execute a canonicalized einsum against qtensor codes through the
+    fused kernel.  Codes cross as uint8; the decode happens in-kernel."""
+    from repro.kernels.lut_dequant_matmul import ops as _ops
+
+    codes, lut, qmeta = w["codes"], w["lut"], w["qmeta"]
+    xs, ws = spec.replace(" ", "").split("->")[0].split(",")
+    xdims = dict(zip(xs, x.shape))
+    wdims = dict(zip(ws, codes.shape))
+    for l in plan.contract + plan.batch:
+        if l in xdims and l in wdims and xdims[l] != wdims[l]:
+            raise ValueError(f"dim mismatch for '{l}' in {spec}: "
+                             f"{x.shape} vs {codes.shape}")
+    b_shape = tuple(xdims[l] for l in plan.batch)
+    m_shape = tuple(xdims[l] for l in plan.xfree)
+    k_shape = tuple(wdims[l] for l in plan.contract)
+    n_shape = tuple(wdims[l] for l in plan.wfree)
+    b, m, k, n = (_prod(b_shape), _prod(m_shape),
+                  _prod(k_shape), _prod(n_shape))
+
+    xt = _maybe_transpose(x, plan.x_perm)
+    pol = _POLICY
+    # A pure 2-D [N, K] -> [K, N] weight swap (tied unembedding) is
+    # handled by the kernel's transposed-codes layout: no HBM transpose
+    # of the code table, the swap happens on decoded VMEM tiles.
+    kernel_transpose = (not plan.batch and codes.ndim == 2
+                        and plan.w_perm == (1, 0))
+    ct = codes if kernel_transpose else _maybe_transpose(codes, plan.w_perm)
+    call = functools.partial(
+        _ops.lut_dequant_matmul, lut=lut, qmeta=qmeta,
+        decode_mode=pol.decode_mode, out_dtype=jnp.float32,
+        autotune=pol.autotune)
+    if plan.batch:
+        x2 = xt.reshape((b, m, k))
+        c2 = ct.reshape((b, k, n))
+        out = jax.vmap(lambda a, c: call(a, c))(x2, c2)
+    elif kernel_transpose:
+        out = call(xt.reshape((m, k)), ct, transpose_codes=True)
+    else:
+        out = call(xt.reshape((m, k)), ct.reshape((k, n)))
+    out = out.reshape(b_shape + m_shape + n_shape)
+    out = _maybe_transpose(out, plan.out_perm)
+    return out.astype(cdtype)
+
+
+def dense(x: jax.Array, w, *, dtype=None, epilogue: str | None = None,
+          bias=None) -> jax.Array:
     """``x @ w`` where ``w`` may be quantized.  Contracts last axis of x
-    with first axis of w."""
+    with first axis of w.  ``epilogue``/``bias`` fuse an activation
+    (gelu/silu/relu) and a bias add into the kernel flush."""
     cdtype = dtype or x.dtype
     if eq.is_qtensor(w):
-        if _USE_PALLAS_KERNEL and w["codes"].ndim == 2 and x.ndim >= 2:
+        if _fused_enabled() and w["codes"].ndim == 2:
             from repro.kernels.lut_dequant_matmul import ops as _ops
 
+            pol = _POLICY
+            fuse_ep = pol.fuse_epilogues
             lead = x.shape[:-1]
             x2 = x.reshape((-1, x.shape[-1]))
-            out = _ops.lut_dequant_matmul(x2, w["codes"], w["lut"])
-            return out.reshape(lead + (w["codes"].shape[-1],)).astype(cdtype)
+            out = _ops.lut_dequant_matmul(
+                x2, w["codes"], w["lut"], w["qmeta"],
+                decode_mode=pol.decode_mode,
+                epilogue=epilogue if fuse_ep else None,
+                bias=bias if fuse_ep else None,
+                out_dtype=jnp.float32, autotune=pol.autotune)
+            out = out.reshape(lead + (w["codes"].shape[-1],))
+            if not fuse_ep:
+                out = _epilogue_jnp(out, epilogue, bias)
+            return out.astype(cdtype)
         wf = materialize(w, cdtype)
-        return jnp.matmul(x.astype(cdtype), wf, preferred_element_type=jnp.float32).astype(cdtype)
-    return jnp.matmul(
-        x.astype(cdtype), w.astype(cdtype), preferred_element_type=jnp.float32
-    ).astype(cdtype)
+        out = jnp.matmul(x.astype(cdtype), wf,
+                         preferred_element_type=jnp.float32)
+        return _epilogue_jnp(out, epilogue, bias).astype(cdtype)
+    out = jnp.matmul(
+        x.astype(cdtype), w.astype(cdtype),
+        preferred_element_type=jnp.float32)
+    return _epilogue_jnp(out, epilogue, bias).astype(cdtype)
 
 
-def dense_general(x: jax.Array, w, contract_spec: str, *, dtype=None) -> jax.Array:
-    """Einsum with a possibly-quantized weight, e.g. 'bsd,dnh->bsnh'."""
+def _epilogue_jnp(out: jax.Array, epilogue: str | None, bias) -> jax.Array:
+    from repro.kernels.lut_dequant_matmul.lut_dequant_matmul import (
+        apply_activation,
+    )
+
+    if bias is not None:
+        out = out + bias.astype(out.dtype)
+    return apply_activation(out, epilogue)
+
+
+def dense_general(x: jax.Array, w, contract_spec: str, *,
+                  dtype=None) -> jax.Array:
+    """Einsum with a possibly-quantized weight, e.g. 'bsd,dnh->bsnh'.
+
+    Quantized weights dispatch through the fused kernel for every spec
+    the canonicalizer can express as a (batched) 2-D matmul — codes are
+    reshaped/byte-transposed, never decoded outside the kernel."""
     cdtype = dtype or x.dtype
+    if eq.is_qtensor(w) and _fused_enabled():
+        plan = _einsum_plan(contract_spec)
+        if plan is not None and w["codes"].ndim == \
+                len(contract_spec.replace(" ", "").split("->")[0]
+                    .split(",")[1]):
+            return _fused_einsum(x, w, plan, contract_spec, cdtype)
     wf = materialize(w, cdtype)
     return jnp.einsum(
         contract_spec, x.astype(cdtype), wf, preferred_element_type=jnp.float32
     ).astype(cdtype)
+
+
+def gated_mlp(x: jax.Array, w_gate, w_up, activation: str, *,
+              dtype=None) -> jax.Array:
+    """``act(x @ w_gate) * (x @ w_up)`` — the gated-MLP front half.
+
+    When both weights are quantized 2-D qtensors, this runs as ONE fused
+    dual-matmul kernel (shared x DMA, both decodes in VMEM, the gate
+    intermediate never reaches HBM).  Falls back to two dense calls
+    otherwise."""
+    cdtype = dtype or x.dtype
+    pol = _POLICY
+    if (eq.is_qtensor(w_gate) and eq.is_qtensor(w_up)
+            and _fused_enabled() and pol.fuse_epilogues
+            and w_gate["codes"].ndim == 2
+            and w_gate["codes"].shape == w_up["codes"].shape):
+        from repro.kernels.lut_dequant_matmul import ops as _ops
+
+        lead = x.shape[:-1]
+        x2 = x.reshape((-1, x.shape[-1]))
+        out = _ops.lut_dequant_matmul_gated(
+            x2, w_gate["codes"], w_up["codes"], w_gate["lut"], w_up["lut"],
+            w_gate["qmeta"], w_up["qmeta"], activation=activation,
+            decode_mode=pol.decode_mode, out_dtype=jnp.float32,
+            autotune=pol.autotune)
+        return out.reshape(lead + (w_gate["codes"].shape[-1],)).astype(cdtype)
+    g = dense(x, w_gate, dtype=cdtype, epilogue=activation)
+    return (g * dense(x, w_up, dtype=cdtype)).astype(cdtype)
+
+
+def embed_lookup(w, idx: jax.Array, dtype) -> jax.Array:
+    """Embedding-table row gather that never decodes the full table:
+    for qtensors, gather uint8 code rows first, then map through the
+    256-entry LUT (bytes cross HBM, not the bf16 table)."""
+    if eq.is_qtensor(w):
+        rows = jnp.take(w["codes"], idx, axis=0).astype(jnp.int32)
+        return jnp.take(w["lut"].astype(dtype), rows, axis=0)
+    return w.astype(dtype)[idx]
 
 
 # ----------------------------------------------------------------------

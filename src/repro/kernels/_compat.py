@@ -1,0 +1,13 @@
+"""Small cross-version Pallas compatibility aliases.
+
+``pltpu.TPUCompilerParams`` was renamed ``pltpu.CompilerParams`` in
+newer JAX; kernels import the alias from here so either works."""
+
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

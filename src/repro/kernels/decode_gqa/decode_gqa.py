@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels._compat import CompilerParams
+
 
 def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             *, block_s: int, num_kv: int, groups: int, out_dtype):
@@ -60,9 +62,12 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _flush():
-        o_ref[0] = (acc_ref[...] /
-                    jnp.maximum(l_ref[...], 1e-30)[..., None]
-                    ).astype(out_dtype)
+        # A sequence with no valid entries (lengths[b] == 0) never
+        # raised the running max off its -1e30 init; emit zeros for it
+        # instead of the softmax-of-all-masked mean.
+        seen = m_ref[...] > -5e29                      # [n_kv, g]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        o_ref[0] = jnp.where(seen[..., None], out, 0.0).astype(out_dtype)
 
 
 @functools.partial(
@@ -102,7 +107,7 @@ def decode_gqa_kernel(
                           groups=g, out_dtype=out_dtype),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((b, n_kv, g, hd), out_dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,4 +1,10 @@
-"""Public wrapper: dtype/shape handling + interpret fallback."""
+"""Public wrapper: dtype/shape handling + interpret fallback.
+
+Any cache length works: the cache view is zero-padded up to a multiple
+of the kernel block internally and the padded tail is masked out via
+``lengths`` (the kernel's per-sequence validity prefetch), so serving
+never has to pick ``max_len`` to please the kernel.
+"""
 
 from __future__ import annotations
 
@@ -14,14 +20,19 @@ def decode_gqa(q, k_cache, v_cache, lengths, *, block_s: int | None = None,
     """Flash-decoding GQA with in-kernel KV dequantization.
 
     q: [B, n_kv, g, hd]; caches [B, S, n_kv, hd] in bf16/f8/int8-like
-    dtypes; lengths [B].  Returns [B, n_kv, g, hd].
+    dtypes; lengths [B] (or scalar, broadcast).  Any S works — the cache
+    view pads to the kernel block and padding is masked via ``lengths``.
+    Returns [B, n_kv, g, hd].
     """
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     out_dtype = out_dtype or jnp.float32
+    b = q.shape[0]
     s = k_cache.shape[1]
     if block_s is None:
         block_s = min(512, s)
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    lengths = jnp.clip(lengths, 0, s)
     if s % block_s != 0:
         pad = block_s - s % block_s
         widths = ((0, 0), (0, pad), (0, 0), (0, 0))

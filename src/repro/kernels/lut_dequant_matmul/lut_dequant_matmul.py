@@ -14,8 +14,16 @@ Two decode modes:
   cheaper than a serialized 8-bit gather, so the "LUT" collapses into
   arithmetic.  Bit-identical up to float rounding (tested).
 
+Fused epilogues (DESIGN.md §Fused-path): the accumulator flush can apply
+``+bias`` and/or an activation (``gelu``/``silu``/``relu``) so chains
+like ``act(x @ w_up)`` never round-trip an intermediate through HBM.
+The gated variant runs *two* dequant matmuls against the same ``x``
+block (w_gate and w_up share the [K, N] geometry in every gated MLP of
+the zoo) and flushes ``act(x@w_g) * (x@w_u)`` — the 3-round-trip MLP
+front half collapses into one kernel.
+
 Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary"); fp32 VMEM scratch
-accumulator, flushed to the output tile on the last K step.  MXU dims
+accumulator(s), flushed to the output tile on the last K step.  MXU dims
 (bm, bk, bn) default to 128-multiples.
 """
 
@@ -27,6 +35,10 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+EPILOGUES = ("gelu", "silu", "relu")
 
 
 def _decode_gather(lut_row: jax.Array, codes: jax.Array) -> jax.Array:
@@ -43,65 +55,183 @@ def _decode_alu(qmeta: jax.Array, codes: jax.Array) -> jax.Array:
     return sign * mag
 
 
-def _kernel(x_ref, codes_ref, lut_ref, qmeta_ref, o_ref, acc_ref,
-            *, decode_mode: str, out_dtype):
+def apply_activation(x: jax.Array, kind: str | None) -> jax.Array:
+    """Shared epilogue-activation ladder (kernel, reference, and the
+    jnp fallback in lama_layers all dispatch through this)."""
+    if kind is None:
+        return x
+    if kind == "gelu":
+        return jax.nn.gelu(x)
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "relu":
+        return jnp.maximum(x, 0.0)
+    raise ValueError(kind)
+
+
+def _kernel(x_ref, codes_ref, lut_ref, qmeta_ref, bias_ref, o_ref, acc_ref,
+            *, decode_mode: str, epilogue: str | None, has_bias: bool,
+            w_transposed: bool, out_dtype):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    codes = codes_ref[...]                        # [bk, bn] uint8
+    codes = codes_ref[...]                        # [bk, bn] (or [bn, bk])
     if decode_mode == "gather":
-        w = _decode_gather(lut_ref[0, :], codes)  # [bk, bn] f32
+        w = _decode_gather(lut_ref[0, :], codes)  # f32
     else:
         w = _decode_alu(qmeta_ref[0, :], codes)
     x = x_ref[...].astype(jnp.float32)            # [bm, bk]
-    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+    if w_transposed:
+        # codes stored [N, K] (e.g. a tied embedding table): decode the
+        # [bn, bk] block and contract on its last axis — the transpose
+        # happens on the VMEM-resident tile, never on the HBM table.
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+    else:
+        acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
     def _flush():
-        o_ref[...] = acc_ref[...].astype(out_dtype)
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + bias_ref[0, :][None, :]
+        o_ref[...] = apply_activation(acc, epilogue).astype(out_dtype)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("bm", "bk", "bn", "decode_mode", "out_dtype",
-                     "interpret"),
+    static_argnames=("bm", "bk", "bn", "decode_mode", "epilogue",
+                     "has_bias", "w_transposed", "out_dtype", "interpret"),
 )
 def lut_dequant_matmul_kernel(
     x: jax.Array,        # [M, K] float
-    codes: jax.Array,    # [K, N] uint8
+    codes: jax.Array,    # [K, N] uint8 ([N, K] when w_transposed)
     lut: jax.Array,      # [256] float32 decode table
     qmeta: jax.Array,    # [4] float32 (alpha, beta, base, bits)
+    bias: jax.Array,     # [N] float32 (ignored unless has_bias)
     *,
     bm: int = 128,
     bk: int = 128,
     bn: int = 128,
     decode_mode: str = "gather",
+    epilogue: str | None = None,
+    has_bias: bool = False,
+    w_transposed: bool = False,
     out_dtype=jnp.float32,
     interpret: bool = False,
 ) -> jax.Array:
     m, k = x.shape
-    k2, n = codes.shape
-    assert k == k2, (x.shape, codes.shape)
+    if w_transposed:
+        n, k2 = codes.shape
+    else:
+        k2, n = codes.shape
+    assert k == k2, (x.shape, codes.shape, w_transposed)
     assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
     grid = (m // bm, n // bn, k // bk)
 
+    codes_spec = (pl.BlockSpec((bn, bk), lambda i, j, kk: (j, kk))
+                  if w_transposed else
+                  pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)))
     return pl.pallas_call(
         functools.partial(_kernel, decode_mode=decode_mode,
-                          out_dtype=out_dtype),
+                          epilogue=epilogue, has_bias=has_bias,
+                          w_transposed=w_transposed, out_dtype=out_dtype),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
-            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            codes_spec,
             pl.BlockSpec((1, 256), lambda i, j, kk: (0, 0)),   # resident LUT
             pl.BlockSpec((1, 4), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
         out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(x, codes.astype(jnp.uint8), lut.reshape(1, 256).astype(jnp.float32),
-      qmeta.reshape(1, 4).astype(jnp.float32))
+      qmeta.reshape(1, 4).astype(jnp.float32),
+      bias.reshape(1, n).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------
+# Gated dual-matmul variant: act(x @ decode(cg)) * (x @ decode(cu))
+# ---------------------------------------------------------------------
+
+def _gated_kernel(x_ref, cg_ref, cu_ref, luts_ref, qmetas_ref, o_ref,
+                  accg_ref, accu_ref, *, decode_mode: str, activation: str,
+                  out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    if decode_mode == "gather":
+        wg = _decode_gather(luts_ref[0, :], cg_ref[...])
+        wu = _decode_gather(luts_ref[1, :], cu_ref[...])
+    else:
+        wg = _decode_alu(qmetas_ref[0, :], cg_ref[...])
+        wu = _decode_alu(qmetas_ref[1, :], cu_ref[...])
+    x = x_ref[...].astype(jnp.float32)
+    accg_ref[...] += jnp.dot(x, wg, preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(x, wu, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        o_ref[...] = (apply_activation(accg_ref[...], activation)
+                      * accu_ref[...]).astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "decode_mode", "activation",
+                     "out_dtype", "interpret"),
+)
+def lut_dequant_matmul_gated_kernel(
+    x: jax.Array,         # [M, K] float
+    codes_g: jax.Array,   # [K, N] uint8 (gate projection)
+    codes_u: jax.Array,   # [K, N] uint8 (up projection)
+    luts: jax.Array,      # [2, 256] float32 (gate table, up table)
+    qmetas: jax.Array,    # [2, 4] float32
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    decode_mode: str = "gather",
+    activation: str = "silu",
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    m, k = x.shape
+    k2, n = codes_g.shape
+    assert k == k2 and codes_u.shape == codes_g.shape, (
+        x.shape, codes_g.shape, codes_u.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+
+    return pl.pallas_call(
+        functools.partial(_gated_kernel, decode_mode=decode_mode,
+                          activation=activation, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((2, 256), lambda i, j, kk: (0, 0)),   # resident LUTs
+            pl.BlockSpec((2, 4), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x, codes_g.astype(jnp.uint8), codes_u.astype(jnp.uint8),
+      luts.reshape(2, 256).astype(jnp.float32),
+      qmetas.reshape(2, 4).astype(jnp.float32))

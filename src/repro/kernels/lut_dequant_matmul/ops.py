@@ -1,14 +1,52 @@
-"""Jit'd public wrapper: padding, tiling choice, interpret fallback."""
+"""Public wrapper: M-bucketing, autotuned tiling, padding, interpret
+fallback.
+
+Two serving-critical behaviours live here (DESIGN.md §Fused-path):
+
+* **M-bucketing** — ``bm`` used to be derived from the raw ``m``, so
+  every distinct batch/sequence length compiled a fresh ``pallas_call``.
+  M is now padded up a small fixed ladder (then to multiples of 512), so
+  serving sees a handful of compiled kernels regardless of batch mix.
+* **Autotuning** — ``(bm, bk, bn)`` per padded shape is picked by timing
+  candidate tilings on the real device and cached persistently (JSON, see
+  DESIGN.md for the format).  Tuning only triggers on a real TPU backend
+  (or with ``REPRO_AUTOTUNE=1``); CPU/interpret runs use the default
+  tiling so tests never pay tuning time.
+"""
 
 from __future__ import annotations
 
+import json
+import os
+import time
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels.lut_dequant_matmul.lut_dequant_matmul import (
+    lut_dequant_matmul_gated_kernel,
     lut_dequant_matmul_kernel,
 )
-from repro.kernels.lut_dequant_matmul.ref import lut_dequant_matmul_ref
+from repro.kernels.lut_dequant_matmul.ref import (
+    lut_dequant_matmul_gated_ref,
+    lut_dequant_matmul_ref,
+)
+
+# Fixed ladder keeps the set of compiled M shapes small; beyond the
+# ladder, multiples of 512 (decode batches and prefill token counts both
+# land there).
+M_LADDER = (8, 16, 32, 64, 128, 256, 512)
+_VMEM_BUDGET = 8 * 1024 * 1024
+_TUNE_VERSION = 1
+
+
+def bucket_m(m: int) -> int:
+    """Smallest ladder entry >= m (multiples of 512 past the ladder)."""
+    for b in M_LADDER:
+        if m <= b:
+            return b
+    return -(-m // 512) * 512
 
 
 def _pad_to(x, mult, axis):
@@ -20,31 +58,307 @@ def _pad_to(x, mult, axis):
     return jnp.pad(x, widths)
 
 
+def _pad_axis_to(x, size, axis):
+    if x.shape[axis] == size:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, size - x.shape[axis])
+    return jnp.pad(x, widths)
+
+
+def _default_tiling(m_pad: int, k_pad: int, n_pad: int):
+    return (min(128, m_pad), min(128, k_pad), min(128, n_pad))
+
+
+def _candidate_tilings(m_pad: int, k_pad: int, n_pad: int,
+                       dual: bool = False):
+    """Divisibility- and VMEM-feasible (bm, bk, bn) candidates.
+    ``dual`` sizes for the gated kernel (two codes blocks, two
+    accumulators)."""
+    out = []
+    n_codes = 2 if dual else 1
+    n_acc = 2 if dual else 1
+    for bm in (32, 64, 128, 256):
+        if bm > m_pad or m_pad % bm:
+            continue
+        for bk in (128, 256, 512):
+            if bk > k_pad or k_pad % bk:
+                continue
+            for bn in (128, 256, 512):
+                if bn > n_pad or n_pad % bn:
+                    continue
+                vmem = (bm * bk * 4                     # x block
+                        + n_codes * bk * bn             # codes (uint8)
+                        + (n_acc + 1) * bm * bn * 4)    # acc(s) + out tile
+                if vmem <= _VMEM_BUDGET:
+                    out.append((bm, bk, bn))
+    default = _default_tiling(m_pad, k_pad, n_pad)
+    if default not in out:
+        out.insert(0, default)
+    return out
+
+
+class Autotuner:
+    """Persistent (bm, bk, bn) selection cache.
+
+    Disk format (JSON)::
+
+        {"version": 1,
+         "entries": {"<backend>|<kind>|<m>|<k>|<n>|<decode_mode>|<extra>":
+                     {"tile": [bm, bk, bn], "us": 123.4}}}
+    """
+
+    def __init__(self, path: str | None = None):
+        self.path = path or os.environ.get(
+            "REPRO_AUTOTUNE_CACHE",
+            os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                         "lut_dequant_matmul_tune.json"))
+        self._mem: dict[str, tuple[int, int, int]] = {}
+        self._disk_loaded = False
+
+    # -- persistence ---------------------------------------------------
+    def _load_disk(self):
+        if self._disk_loaded:
+            return
+        self._disk_loaded = True
+        try:
+            with open(self.path) as f:
+                blob = json.load(f)
+            if blob.get("version") == _TUNE_VERSION:
+                for key, ent in blob.get("entries", {}).items():
+                    self._mem[key] = tuple(ent["tile"])
+        except (OSError, ValueError, KeyError, TypeError):
+            pass
+
+    def _save_disk(self, key: str, tile, us: float):
+        try:
+            os.makedirs(os.path.dirname(self.path), exist_ok=True)
+            blob = {"version": _TUNE_VERSION, "entries": {}}
+            try:
+                with open(self.path) as f:
+                    old = json.load(f)
+                if old.get("version") == _TUNE_VERSION:
+                    blob["entries"].update(old.get("entries", {}))
+            except (OSError, ValueError):
+                pass
+            blob["entries"][key] = {"tile": list(tile), "us": round(us, 2)}
+            tmp = self.path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(blob, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except OSError:
+            pass
+
+    # -- selection -----------------------------------------------------
+    def peek(self, key: str) -> tuple[int, int, int] | None:
+        """Cached tiling only (memory -> disk); never times, never
+        writes.  Used when the call is being traced under jit — timing
+        tracers measures nothing."""
+        if key not in self._mem:
+            self._load_disk()
+        return self._mem.get(key)
+
+    def get(self, key: str, candidates, bench) -> tuple[int, int, int]:
+        """Best tiling for ``key``: memory cache -> disk cache -> tune.
+
+        ``bench(tile) -> seconds`` is injectable for tests."""
+        cached = self.peek(key)
+        if cached is not None:
+            return cached
+        best, best_t = None, float("inf")
+        for tile in candidates:
+            try:
+                t = bench(tile)
+            except Exception:
+                continue
+            if t < best_t:
+                best, best_t = tile, t
+        if best is None:
+            # nothing validated: fall back without poisoning the cache
+            return candidates[0]
+        self._mem[key] = best
+        self._save_disk(key, best, best_t * 1e6)
+        return best
+
+
+_TUNER = Autotuner()
+
+
+def _autotune_enabled(autotune: bool | None, interpret: bool) -> bool:
+    if autotune is not None:
+        return autotune
+    if os.environ.get("REPRO_AUTOTUNE") == "1":
+        return True
+    return (not interpret) and jax.default_backend() == "tpu"
+
+
+def _bench_kernel(run, iters: int = 5) -> float:
+    jax.block_until_ready(run())   # compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = run()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def _synth_operands(m_pad: int, k_pad: int, n_pad: int,
+                    transpose_codes: bool = False, gated: bool = False):
+    """Concrete random operands of the padded shapes, for timing
+    candidate tilings.  Every production call reaches this op under
+    jit/vmap where the real operands are tracers — timing those would
+    measure tracing, not the device — so the tuner benches on synthetic
+    device-backed data of the same shapes instead (the timing of a
+    tiling does not depend on operand *values*).  Runs eagerly even
+    when invoked from inside a trace; the persistent cache makes it a
+    once-per-shape compile-time cost."""
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(m_pad, k_pad)), jnp.float32)
+    cshape = (n_pad, k_pad) if transpose_codes else (k_pad, n_pad)
+    codes = jnp.asarray(r.integers(0, 256, cshape), jnp.uint8)
+    lut = jnp.asarray(r.normal(size=(256,)) * 0.05, jnp.float32)
+    qmeta = jnp.asarray([0.05, 0.0, 1.5, 7.0], jnp.float32)
+    bias = jnp.zeros((n_pad,), jnp.float32)
+    if gated:
+        codes2 = jnp.asarray(r.integers(0, 256, cshape), jnp.uint8)
+        return x, codes, codes2, lut, qmeta, bias
+    return x, codes, lut, qmeta, bias
+
+
+def _tiling_for(kind: str, m_pad: int, k_pad: int, n_pad: int,
+                decode_mode: str, extra: str, interpret: bool,
+                autotune: bool | None, bench_factory=None):
+    if not _autotune_enabled(autotune, interpret):
+        return _default_tiling(m_pad, k_pad, n_pad)
+    key = "|".join([jax.default_backend(), kind, str(m_pad), str(k_pad),
+                    str(n_pad), decode_mode, extra])
+    cands = _candidate_tilings(m_pad, k_pad, n_pad, dual=(kind == "gated"))
+    return _TUNER.get(key, cands, bench_factory(cands))
+
+
 def lut_dequant_matmul(
     x: jax.Array,          # [M, K]
-    codes: jax.Array,      # [K, N] uint8
+    codes: jax.Array,      # [K, N] uint8 ([N, K] when transpose_codes)
     lut: jax.Array,        # [256]
     qmeta: jax.Array | None = None,
     *,
     decode_mode: str = "gather",
+    epilogue: str | None = None,
+    bias: jax.Array | None = None,
+    transpose_codes: bool = False,
     out_dtype=None,
     interpret: bool | None = None,
+    autotune: bool | None = None,
 ) -> jax.Array:
-    """Fused dequant+matmul; pads to 128 tiles, slices back."""
+    """Fused dequant+matmul with optional bias/activation epilogue.
+
+    M is bucketed (see :func:`bucket_m`) so ragged serving batches reuse
+    a small fixed set of compiled kernels; K/N pad to 128 lanes.
+    ``transpose_codes=True`` contracts against codes stored ``[N, K]``
+    (e.g. a tied embedding table) — the transpose happens per decoded
+    VMEM tile inside the kernel, never on the HBM-resident table."""
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     out_dtype = out_dtype or x.dtype
     m, k = x.shape
-    _, n = codes.shape
-    bm = 128 if m >= 128 else max(8, 1 << (m - 1).bit_length())
-    xk = _pad_to(_pad_to(x, bm, 0), 128, 1)
+    n = codes.shape[0] if transpose_codes else codes.shape[1]
+    m_pad = bucket_m(m)
+    xk = _pad_to(_pad_axis_to(x, m_pad, 0), 128, 1)
     ck = _pad_to(_pad_to(codes, 128, 0), 128, 1)
+    if transpose_codes:
+        n_pad, k_pad = ck.shape
+    else:
+        k_pad, n_pad = ck.shape
     if qmeta is None:
         qmeta = jnp.zeros((4,), jnp.float32)
+    has_bias = bias is not None
+    bias_arr = (_pad_axis_to(bias.astype(jnp.float32), n_pad, 0)
+                if has_bias else jnp.zeros((n_pad,), jnp.float32))
+
+    def bench_factory(_cands):
+        sx, sc, slut, sqm, sb = _synth_operands(
+            m_pad, k_pad, n_pad, transpose_codes=transpose_codes)
+
+        def bench(tile):
+            bm, bk, bn = tile
+            return _bench_kernel(lambda: lut_dequant_matmul_kernel(
+                sx, sc, slut, sqm, sb, bm=bm, bk=bk, bn=bn,
+                decode_mode=decode_mode, epilogue=epilogue,
+                has_bias=has_bias, w_transposed=transpose_codes,
+                out_dtype=jnp.float32, interpret=interpret))
+        return bench
+
+    bm, bk, bn = _tiling_for(
+        "mm", m_pad, k_pad, n_pad, decode_mode,
+        f"{epilogue}|{int(has_bias)}|{int(transpose_codes)}",
+        interpret, autotune, bench_factory)
     out = lut_dequant_matmul_kernel(
-        xk, ck, lut, qmeta, bm=bm, decode_mode=decode_mode,
+        xk, ck, lut, qmeta, bias_arr, bm=bm, bk=bk, bn=bn,
+        decode_mode=decode_mode, epilogue=epilogue, has_bias=has_bias,
+        w_transposed=transpose_codes, out_dtype=jnp.float32,
+        interpret=interpret)
+    return out[:m, :n].astype(out_dtype)
+
+
+def lut_dequant_matmul_gated(
+    x: jax.Array,          # [M, K]
+    codes_g: jax.Array,    # [K, N] uint8 (gate)
+    codes_u: jax.Array,    # [K, N] uint8 (up)
+    lut_g: jax.Array,      # [256]
+    lut_u: jax.Array,      # [256]
+    qmeta_g: jax.Array | None = None,
+    qmeta_u: jax.Array | None = None,
+    *,
+    activation: str = "silu",
+    decode_mode: str = "gather",
+    out_dtype=None,
+    interpret: bool | None = None,
+    autotune: bool | None = None,
+) -> jax.Array:
+    """Fused ``act(x @ dec(codes_g)) * (x @ dec(codes_u))`` — the gated
+    MLP front half in one kernel: one x DMA feeds both matmuls, and the
+    gate intermediate never exists in HBM."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    out_dtype = out_dtype or x.dtype
+    m, k = x.shape
+    _, n = codes_g.shape
+    m_pad = bucket_m(m)
+    xk = _pad_to(_pad_axis_to(x, m_pad, 0), 128, 1)
+    cg = _pad_to(_pad_to(codes_g, 128, 0), 128, 1)
+    cu = _pad_to(_pad_to(codes_u, 128, 0), 128, 1)
+    k_pad, n_pad = cg.shape
+    luts = jnp.stack([lut_g.astype(jnp.float32), lut_u.astype(jnp.float32)])
+    if qmeta_g is None:
+        qmeta_g = jnp.zeros((4,), jnp.float32)
+    if qmeta_u is None:
+        qmeta_u = jnp.zeros((4,), jnp.float32)
+    qmetas = jnp.stack([qmeta_g.astype(jnp.float32),
+                        qmeta_u.astype(jnp.float32)])
+
+    def bench_factory(_cands):
+        sx, scg, scu, slut, sqm, _sb = _synth_operands(
+            m_pad, k_pad, n_pad, gated=True)
+        sluts = jnp.stack([slut, slut])
+        sqms = jnp.stack([sqm, sqm])
+
+        def bench(tile):
+            bm, bk, bn = tile
+            return _bench_kernel(lambda: lut_dequant_matmul_gated_kernel(
+                sx, scg, scu, sluts, sqms, bm=bm, bk=bk, bn=bn,
+                decode_mode=decode_mode, activation=activation,
+                out_dtype=jnp.float32, interpret=interpret))
+        return bench
+
+    bm, bk, bn = _tiling_for(
+        "gated", m_pad, k_pad, n_pad, decode_mode, activation,
+        interpret, autotune, bench_factory)
+    out = lut_dequant_matmul_gated_kernel(
+        xk, cg, cu, luts, qmetas, bm=bm, bk=bk, bn=bn,
+        decode_mode=decode_mode, activation=activation,
         out_dtype=jnp.float32, interpret=interpret)
     return out[:m, :n].astype(out_dtype)
 
 
-__all__ = ["lut_dequant_matmul", "lut_dequant_matmul_ref"]
+__all__ = ["lut_dequant_matmul", "lut_dequant_matmul_gated",
+           "lut_dequant_matmul_ref", "lut_dequant_matmul_gated_ref",
+           "bucket_m", "Autotuner", "M_LADDER"]

@@ -1,16 +1,32 @@
-"""Pure-jnp oracle for the fused LUT-dequant matmul."""
+"""Pure-jnp oracles for the fused LUT-dequant matmul (+ epilogues)."""
 
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.lut_dequant_matmul.lut_dequant_matmul import (
+    apply_activation as _act,
+)
+
 
 def lut_dequant_matmul_ref(
     x: jax.Array, codes: jax.Array, lut: jax.Array, qmeta=None,
-    out_dtype=jnp.float32,
+    out_dtype=jnp.float32, epilogue: str | None = None, bias=None,
 ) -> jax.Array:
     w = lut.astype(jnp.float32)[codes.astype(jnp.int32)]
-    return jnp.matmul(
-        x.astype(jnp.float32), w, preferred_element_type=jnp.float32
-    ).astype(out_dtype)
+    out = jnp.matmul(
+        x.astype(jnp.float32), w, preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    return _act(out, epilogue).astype(out_dtype)
+
+
+def lut_dequant_matmul_gated_ref(
+    x: jax.Array, codes_g: jax.Array, codes_u: jax.Array,
+    lut_g: jax.Array, lut_u: jax.Array, activation: str = "silu",
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    g = lut_dequant_matmul_ref(x, codes_g, lut_g)
+    u = lut_dequant_matmul_ref(x, codes_u, lut_u)
+    return (_act(g, activation) * u).astype(out_dtype)

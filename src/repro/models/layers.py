@@ -30,8 +30,10 @@ def constrain_act(x: jax.Array) -> jax.Array:
     the data axis).  Under CONTEXT_PARALLEL the sequence dim additionally
     shards over "model".  No-op outside a mesh context."""
     try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
+        from repro.launch.mesh import get_abstract_mesh
+
+        mesh = get_abstract_mesh()
+        if mesh is None:
             return x
         fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         if not fsdp or x.ndim < 2:
@@ -345,6 +347,36 @@ def mha(
     return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
 
 
+def mha_decode(
+    p: Params,
+    x: jax.Array,                      # [B, 1, D] — one new token
+    cfg: ModelConfig,
+    positions: jax.Array,              # [B, 1] absolute positions
+    k_cache: jax.Array,                # [B, T, n_kv, hd] (bf16/f8/...)
+    v_cache: jax.Array,
+    lengths: jax.Array,                # [B] valid cache entries
+    use_rope: bool = True,
+) -> jax.Array:
+    """Decode-step GQA through the flash-decoding kernel: the cache is
+    streamed block-wise with in-kernel dequantization (narrow KV bytes
+    cross HBM), online-softmax carries in VMEM.  Numerically equals
+    :func:`mha` with a causal-by-length mask."""
+    from repro.kernels.decode_gqa import decode_gqa
+
+    dt = x.dtype
+    q = ll.dense_general(x, p["wq"], "bsd,dnh->bsnh")
+    if cfg.qk_norm:
+        q = apply_head_rms(p["q_norm"], q)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+    b, s, h, hd = q.shape
+    groups = cfg.num_heads // cfg.num_kv_heads
+    qg = q[:, 0].reshape(b, cfg.num_kv_heads, groups, hd)
+    out = decode_gqa(qg, k_cache, v_cache, lengths)
+    out = out.reshape(b, 1, h, hd).astype(dt)
+    return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
+
+
 def self_kv(p: Params, x: jax.Array, cfg: ModelConfig,
             positions: jax.Array, use_rope: bool = True):
     """Project K,V for cache writes (decode path)."""
@@ -370,22 +402,16 @@ def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
     return s
 
 
-def _act(x: jax.Array, kind: str) -> jax.Array:
-    if kind == "silu":
-        return jax.nn.silu(x)
-    if kind == "gelu":
-        return jax.nn.gelu(x)
-    if kind == "relu":
-        return jax.nn.relu(x)
-    raise ValueError(kind)
-
-
 def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if cfg.gated_mlp:
-        g = _act(ll.dense(x, p["w_gate"]), cfg.activation)
-        u = ll.dense(x, p["w_up"])
-        return ll.dense(g * u, p["w_down"])
-    return ll.dense(_act(ll.dense(x, p["w_up"]), cfg.activation), p["w_down"])
+        # Quantized weights: ONE fused dual-matmul kernel computes
+        # act(x@w_gate)*(x@w_up) (gate intermediate never reaches HBM),
+        # then the down projection is a second fused call — the MLP
+        # chain is 2 kernel flushes instead of 3 HBM round-trips.
+        h = ll.gated_mlp(x, p["w_gate"], p["w_up"], cfg.activation)
+        return ll.dense(h, p["w_down"])
+    return ll.dense(ll.dense(x, p["w_up"], epilogue=cfg.activation),
+                    p["w_down"])
 
 
 # -------------------------------------------------------- embeddings --
@@ -398,8 +424,9 @@ def embed_specs(cfg: ModelConfig) -> dict:
 
 
 def embed_tokens(p: Params, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
-    table = ll.materialize(p["tokens"], jnp.dtype(cfg.compute_dtype))
-    return table[tokens]
+    # qtensor tables gather code rows then LUT-decode just those rows —
+    # the full-precision table never materializes.
+    return ll.embed_lookup(p["tokens"], tokens, jnp.dtype(cfg.compute_dtype))
 
 
 def unembed_specs(cfg: ModelConfig) -> dict:
@@ -411,10 +438,15 @@ def unembed_specs(cfg: ModelConfig) -> dict:
 
 def logits_fn(params: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
     if cfg.tie_embeddings:
-        table = ll.materialize(params["embed"]["tokens"],
-                               jnp.dtype(cfg.compute_dtype))
-        out = jnp.einsum("bsd,vd->bsv", x, table,
-                         preferred_element_type=jnp.float32)
+        w = params["embed"]["tokens"]
+        if ll.eq.is_qtensor(w):
+            # dense_general canonicalizes 'bsd,vd->bsv' (codes transposed
+            # as bytes) so a quantized tied unembedding hits the kernel.
+            out = ll.dense_general(x, w, "bsd,vd->bsv", dtype=jnp.float32)
+        else:
+            table = ll.materialize(w, jnp.dtype(cfg.compute_dtype))
+            out = jnp.einsum("bsd,vd->bsv", x, table,
+                             preferred_element_type=jnp.float32)
     else:
         out = ll.dense(x, params["unembed"]["out"], dtype=x.dtype)
         out = out.astype(jnp.float32)

@@ -55,16 +55,17 @@ def _router(p, xf: jax.Array, cfg: ModelConfig):
 
 
 def _expert_ffn(p, buf: jax.Array, cfg: ModelConfig) -> jax.Array:
-    """buf: [E, C, D] -> [E, C, D] through each expert's gated MLP."""
+    """buf: [E, C, D] -> [E, C, D] through each expert's gated MLP.
+
+    Grouped einsums go through ``dense_general``, which canonicalizes
+    the per-expert batch dim and vmaps the fused dequant-matmul kernel —
+    quantized expert weights never materialize in HBM."""
     act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
-    wg = ll.materialize(p["w_gate"], buf.dtype)
-    wu = ll.materialize(p["w_up"], buf.dtype)
-    wd = ll.materialize(p["w_down"], buf.dtype)
-    g = jnp.einsum("ecd,edf->ecf", buf, wg, preferred_element_type=jnp.float32)
-    u = jnp.einsum("ecd,edf->ecf", buf, wu, preferred_element_type=jnp.float32)
+    g = ll.dense_general(buf, p["w_gate"], "ecd,edf->ecf", dtype=jnp.float32)
+    u = ll.dense_general(buf, p["w_up"], "ecd,edf->ecf", dtype=jnp.float32)
     h = (act(g) * u).astype(buf.dtype)
-    return jnp.einsum("ecf,efd->ecd", h, wd,
-                      preferred_element_type=jnp.float32).astype(buf.dtype)
+    return ll.dense_general(h, p["w_down"], "ecf,efd->ecd",
+                            dtype=jnp.float32).astype(buf.dtype)
 
 
 def _constrain(x, *spec):
@@ -72,8 +73,10 @@ def _constrain(x, *spec):
     'fsdp' in the spec expands to the (pod, data) axes present."""
     import math as _math
     try:
-        mesh = jax.sharding.get_abstract_mesh()
-        if mesh is None or mesh.empty:
+        from repro.launch.mesh import get_abstract_mesh
+
+        mesh = get_abstract_mesh()
+        if mesh is None:
             return x
         fsdp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
         out = []
@@ -137,8 +140,28 @@ def apply_moe_routed(p, x: jax.Array, cfg: ModelConfig):
     return _constrain(y, "fsdp", None).reshape(b, s, d), aux
 
 
+def _expert_slices(w, dtype):
+    """Scan-able per-expert leaves: uint8 code slabs for qtensors (the
+    decode stays in-kernel), materialized weights otherwise."""
+    from repro.core import exponential_quant as eq
+
+    if eq.is_qtensor(w):
+        return w["codes"]
+    return ll.materialize(w, dtype)
+
+
+def _expert_leaf(w, sl):
+    from repro.core import exponential_quant as eq
+
+    if eq.is_qtensor(w):
+        return {"codes": sl, "lut": w["lut"], "qmeta": w["qmeta"]}
+    return sl
+
+
 def apply_moe_dense(p, x: jax.Array, cfg: ModelConfig):
-    """Oracle/baseline: all experts compute all tokens (scan over E)."""
+    """Oracle/baseline: all experts compute all tokens (scan over E).
+    Quantized expert weights ride through the scan as uint8 code slabs
+    and dispatch to the fused (gated) kernel per expert."""
     b, s, d = x.shape
     t = b * s
     xf = x.reshape(t, d)
@@ -148,20 +171,23 @@ def apply_moe_dense(p, x: jax.Array, cfg: ModelConfig):
         jnp.arange(t)[:, None], top_e
     ].set(top_w)
 
-    act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
-
     def body(carry, ew):
         wg, wu, wd, we = ew
-        g = act(xf @ wg.astype(xf.dtype))
-        u = xf @ wu.astype(xf.dtype)
-        y = ((g * u) @ wd.astype(xf.dtype))
+        g_leaf = _expert_leaf(p["w_gate"], wg)
+        u_leaf = _expert_leaf(p["w_up"], wu)
+        d_leaf = _expert_leaf(p["w_down"], wd)
+        h = ll.gated_mlp(xf, g_leaf, u_leaf, cfg.activation,
+                         dtype=xf.dtype)
+        y = ll.dense(h, d_leaf, dtype=xf.dtype)
         return carry + y * we[:, None].astype(xf.dtype), None
 
-    wg = ll.materialize(p["w_gate"], xf.dtype)
-    wu = ll.materialize(p["w_up"], xf.dtype)
-    wd = ll.materialize(p["w_down"], xf.dtype)
     init = jnp.zeros((t, d), xf.dtype)
-    y, _ = jax.lax.scan(body, init, (wg, wu, wd, w.T.astype(jnp.float32)))
+    y, _ = jax.lax.scan(
+        body, init,
+        (_expert_slices(p["w_gate"], xf.dtype),
+         _expert_slices(p["w_up"], xf.dtype),
+         _expert_slices(p["w_down"], xf.dtype),
+         w.T.astype(jnp.float32)))
     return y.reshape(b, s, d), aux
 
 

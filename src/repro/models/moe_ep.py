@@ -33,8 +33,10 @@ from repro.models.moe import _router
 
 
 def _mesh_info():
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty or "model" not in mesh.axis_names:
+    from repro.launch.mesh import get_abstract_mesh
+
+    mesh = get_abstract_mesh()
+    if mesh is None or "model" not in mesh.axis_names:
         return None
     return mesh
 
@@ -86,15 +88,25 @@ def _local_moe(p, x_loc, cfg: ModelConfig, ranks: int, seq_sharded: bool):
         split_axis=0, concat_axis=0, tiled=False)       # [ranks, cap]
 
     # rank-local expert FFN (E_loc experts; E_loc == 1 for llama4@16)
+    from repro.models.moe import _expert_leaf, _expert_slices
+
     act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
     toks = recv.reshape(ranks * cap, d)
-    wg = ll.materialize(p["w_gate"], toks.dtype)     # [e_loc, d, f] local
-    wu = ll.materialize(p["w_up"], toks.dtype)
-    wd = ll.materialize(p["w_down"], toks.dtype)
     if e_loc == 1:
-        h = act(toks @ wg[0]) * (toks @ wu[0])
-        out_toks = h @ wd[0]
+        # single local expert: straight through the fused (gated)
+        # kernel path — quantized codes never materialize.
+        h = ll.gated_mlp(
+            toks, _expert_leaf(p["w_gate"], _expert_slices(
+                p["w_gate"], toks.dtype)[0]),
+            _expert_leaf(p["w_up"], _expert_slices(
+                p["w_up"], toks.dtype)[0]),
+            cfg.activation, dtype=toks.dtype)
+        out_toks = ll.dense(h, _expert_leaf(p["w_down"], _expert_slices(
+            p["w_down"], toks.dtype)[0]), dtype=toks.dtype)
     else:
+        wg = ll.materialize(p["w_gate"], toks.dtype)   # [e_loc, d, f] local
+        wu = ll.materialize(p["w_up"], toks.dtype)
+        wd = ll.materialize(p["w_down"], toks.dtype)
         onehot = jax.nn.one_hot(recv_e.reshape(-1), e_loc, dtype=toks.dtype)
         g = jnp.einsum("td,edf,te->tf", toks, wg, onehot)
         u = jnp.einsum("td,edf,te->tf", toks, wu, onehot)

@@ -153,7 +153,16 @@ def prefill(
 
 
 def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig):
-    """One token step.  tokens: [B, 1].  Returns (logits, new_cache)."""
+    """One token step.  tokens: [B, 1].  Returns (logits, new_cache).
+
+    Attention over the cache goes through the flash-decoding
+    ``decode_gqa`` kernel (policy-gated): the cache is streamed
+    block-wise with in-kernel dequantization, so narrow KV cache dtypes
+    (f8e4m3fn) cross HBM as narrow bytes.  ``flash_decode=False`` in the
+    :class:`~repro.core.lama_layers.FusedPolicy` restores the dense
+    masked attend."""
+    from repro.core import lama_layers as ll
+
     x = L.constrain_act(L.embed_tokens(params["embed"], tokens, cfg))
     b, s, _ = x.shape
     pos = cache["pos"]
@@ -162,6 +171,8 @@ def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig):
     kp = jnp.arange(max_len)
     mask = (kp[None, :] <= pos)  # [1, max_len], same for all queries
     mask = jnp.broadcast_to(mask, (s, max_len))
+    flash = ll.get_policy().flash_decode and s == 1
+    lengths = jnp.broadcast_to(pos + 1, (b,)).astype(jnp.int32)
 
     def body(carry, layer_in):
         x, = carry
@@ -172,8 +183,13 @@ def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig):
             k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(
             v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
-        attn = L.mha(blk_params["attn"], h, cfg, positions, mask,
-                     kv=(k_cache.astype(x.dtype), v_cache.astype(x.dtype)))
+        if flash:
+            attn = L.mha_decode(blk_params["attn"], h, cfg, positions,
+                                k_cache, v_cache, lengths)
+        else:
+            attn = L.mha(blk_params["attn"], h, cfg, positions, mask,
+                         kv=(k_cache.astype(x.dtype),
+                             v_cache.astype(x.dtype)))
         x = x + attn
         h = L.apply_norm(blk_params["ln2"], x, cfg)
         if cfg.is_moe:

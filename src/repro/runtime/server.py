@@ -4,7 +4,13 @@ LLM inference).
 Length-bucketed batched prefill + synchronous batched greedy decode with
 per-request stop handling.  Weights may be served as DNA-TEQ codes
 (``quant_bits``) — the paper's technique as a serving feature: codes in
-HBM (1 B/param), 256-entry decode LUT resident per matmul.
+HBM (1 B/param), 256-entry decode LUT resident per matmul, every matmul
+dispatched through the fused LUT-dequant kernel (the FusedPolicy
+default).  The decode step runs the flash-decoding ``decode_gqa`` kernel
+over the cache; ``kv_dtype="float8_e4m3fn"`` stores the KV cache in
+8-bit floats that are dequantized *inside* the kernel, after the
+HBM->VMEM DMA — narrow bytes are what actually cross HBM.  ``max_len``
+may be any value; cache views pad to the kernel block internally.
 """
 
 from __future__ import annotations
@@ -41,10 +47,15 @@ class Completion:
 
 class InferenceServer:
     def __init__(self, cfg: ModelConfig, params=None, rng_seed: int = 0,
-                 quant_bits: int | None = None, max_len: int = 512):
+                 quant_bits: int | None = None, max_len: int = 512,
+                 kv_dtype: str | jnp.dtype = "float32"):
+        """``kv_dtype``: KV-cache storage dtype — "float32"/"bfloat16"
+        for full fidelity, "float8_e4m3fn" for the narrow-byte cache
+        (dequantized in-kernel by ``decode_gqa``)."""
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         self.max_len = max_len
+        self.kv_dtype = jnp.dtype(kv_dtype)
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
                                    dtype=jnp.float32)
@@ -56,7 +67,7 @@ class InferenceServer:
         self._prefill = jax.jit(
             lambda p, t, pe: self.api.prefill(
                 p, t, cfg, self.max_len, prefix_embeds=pe,
-                cache_dtype=jnp.float32),
+                cache_dtype=self.kv_dtype),
             static_argnames=())
         self._decode = jax.jit(
             lambda p, c, t: self.api.decode_step(p, c, t, cfg))

@@ -7,8 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import exponential_quant as eq
 from repro.core.lut import build_lut, mul_lut

@@ -3,8 +3,7 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-import hypothesis.strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import lut as L
 

@@ -1,12 +1,11 @@
 """DNA-TEQ exponential quantizer: unit + hypothesis property tests."""
 
-import hypothesis
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+
+from _hypothesis_compat import given, hypothesis, settings, st
 
 from repro.core import exponential_quant as eq
 

@@ -83,10 +83,10 @@ class TestCheckpoint:
         """Checkpoints carry logical shapes: restore onto a different
         sharding layout (1-device stand-in for a resized mesh)."""
         from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.mesh import _make_mesh
         t = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
         ckpt.save(tmp_path, 3, t)
-        mesh = jax.make_mesh((1,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _make_mesh((1,), ("data",))
         sh = {"w": NamedSharding(mesh, P("data", None))}
         out, _ = ckpt.restore(tmp_path, t, shardings=sh)
         assert out["w"].sharding == sh["w"]
@@ -174,9 +174,9 @@ class TestGradCompression:
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
 
+        from repro.launch.mesh import _make_mesh
         n = len(jax.devices())
-        mesh = jax.make_mesh((n,), ("pod",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = _make_mesh((n,), ("pod",))
         r = np.random.default_rng(1)
         x = jnp.asarray(r.normal(size=(n, 64)), jnp.float32)
 
