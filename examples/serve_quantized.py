@@ -1,9 +1,13 @@
 """End-to-end serving driver (the paper's kind: LLM inference).
 
-Boots a small qwen3-style model, serves a batch of mixed-length
-requests twice — fp32 weights vs Lama/DNA-TEQ codes — and reports
-throughput, weight-memory footprint, and generation agreement, plus the
-LamaAccel PIM-instrument estimate for the same workload class.
+Boots a small qwen3-style model and serves a mixed-length request
+stream through the continuous-batching ``Engine`` (paged KV cache,
+block-table flash decode) three ways — fp32 weights, Lama/DNA-TEQ
+codes, and codes + float8 KV pages — reporting throughput, weight and
+KV-cache memory, generation agreement, and the LamaAccel PIM-instrument
+estimate for the same workload class.  The legacy length-bucketed
+contiguous-cache path runs once as the baseline the engine is measured
+against.
 
 Run:  PYTHONPATH=src python examples/serve_quantized.py
 """
@@ -15,7 +19,9 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.core import lama_layers as ll
-from repro.runtime.server import InferenceServer, Request
+from repro.runtime.engine import Engine, EngineConfig, Request
+from repro.runtime.paged_cache import PagedKVCache
+from repro.runtime.server import InferenceServer
 
 
 def weight_bytes(params) -> int:
@@ -29,6 +35,13 @@ def weight_bytes(params) -> int:
     return tot
 
 
+def make_engine(cfg, params=None, quant_bits=None, kv_dtype="float32"):
+    return Engine(cfg, params=params, quant_bits=quant_bits,
+                  kv_dtype=kv_dtype,
+                  engine=EngineConfig(num_slots=6, block_size=16,
+                                      max_seq_len=64))
+
+
 def main():
     cfg = get_config("qwen3-1.7b", tiny=True).replace(
         num_layers=4, d_model=128, d_ff=384, compute_dtype="float32")
@@ -38,21 +51,30 @@ def main():
                     max_new_tokens=12)
             for i, l in enumerate(rng.choice([16, 24, 32], size=12))]
 
-    fp = InferenceServer(cfg, max_len=64)
+    fp = make_engine(cfg)
     t0 = time.time()
     fp_out = fp.generate(reqs)
     fp_dt = time.time() - t0
 
-    q = InferenceServer(cfg, params=fp.params, quant_bits=7, max_len=64)
+    # the old synchronous bucketed path on the same stream (baseline)
+    legacy = InferenceServer(cfg, params=fp.params, max_len=64)
+    t0 = time.time()
+    legacy_out = legacy.generate_bucketed(
+        [Request(r.uid, r.prompt, r.max_new_tokens) for r in reqs])
+    legacy_dt = time.time() - t0
+    agree_paths = np.mean([np.mean(a.tokens == b.tokens)
+                           for a, b in zip(fp_out, legacy_out)])
+
+    q = make_engine(cfg, params=fp.params, quant_bits=7)
     t0 = time.time()
     q_out = q.generate([Request(r.uid, r.prompt, r.max_new_tokens)
                         for r in reqs])
     q_dt = time.time() - t0
 
-    # narrow-byte KV cache: f8e4m3fn stored in HBM, dequantized inside
-    # the decode_gqa kernel after the DMA (weights also served as codes)
-    q8 = InferenceServer(cfg, params=fp.params, quant_bits=7, max_len=64,
-                         kv_dtype="float8_e4m3fn")
+    # narrow-byte KV pages: f8e4m3fn stored in HBM, dequantized inside
+    # the paged decode kernel after the DMA (weights also served as codes)
+    q8 = make_engine(cfg, params=fp.params, quant_bits=7,
+                     kv_dtype="float8_e4m3fn")
     q8_out = q8.generate([Request(r.uid, r.prompt, r.max_new_tokens)
                           for r in reqs])
     agree8 = np.mean([np.mean(a.tokens == b.tokens)
@@ -62,8 +84,19 @@ def main():
     agree = np.mean([np.mean(a.tokens == b.tokens)
                      for a, b in zip(fp_out, q_out)])
     fpb, qb = weight_bytes(fp.params), weight_bytes(q.params)
-    print(f"requests: {len(reqs)} (bucketed lengths), "
+    peak_kv = fp.cache.peak_kv_bytes()
+    contig_kv = PagedKVCache.contiguous_bytes(
+        len(reqs), 64, cfg.num_layers, cfg.num_kv_heads,
+        cfg.resolved_head_dim, "float32")
+    print(f"requests: {len(reqs)} (mixed lengths, continuous batching), "
           f"{toks} tokens generated")
+    print(f"engine       : {toks/fp_dt:6.1f} tok/s over "
+          f"{fp.total_decode_steps} decode steps")
+    print(f"bucketed     : {toks/legacy_dt:6.1f} tok/s (legacy baseline), "
+          f"token agreement {agree_paths:.2%}")
+    print(f"peak KV pages: {peak_kv/1e6:.2f} MB vs contiguous "
+          f"[B={len(reqs)}, max_len=64] {contig_kv/1e6:.2f} MB "
+          f"({contig_kv/max(peak_kv,1):.1f}x)")
     print(f"fp32 weights : {fpb/1e6:7.2f} MB   {toks/fp_dt:6.1f} tok/s")
     print(f"lama-7b codes: {qb/1e6:7.2f} MB   {toks/q_dt:6.1f} tok/s   "
           f"({fpb/qb:.2f}x smaller)")

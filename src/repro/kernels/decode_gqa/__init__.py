@@ -1,1 +1,6 @@
-from repro.kernels.decode_gqa.ops import decode_gqa, decode_gqa_ref  # noqa: F401
+from repro.kernels.decode_gqa.ops import (  # noqa: F401
+    decode_gqa,
+    decode_gqa_paged,
+    decode_gqa_paged_ref,
+    decode_gqa_ref,
+)

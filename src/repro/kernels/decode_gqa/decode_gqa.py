@@ -70,6 +70,73 @@ def _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
         o_ref[0] = jnp.where(seen[..., None], out, 0.0).astype(out_dtype)
 
 
+def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *, block_s: int, num_kv: int,
+                  groups: int, out_dtype):
+    # Same online-softmax body; the block table only changes *which*
+    # page the DMA fetched (the index_map), not the math.
+    del bt_ref
+    _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            block_s=block_s, num_kv=num_kv, groups=groups,
+            out_dtype=out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def decode_gqa_paged_kernel(
+    q: jax.Array,             # [B, n_kv, g, hd]
+    k_pages: jax.Array,       # [N_blocks, bs, n_kv, hd] (bf16 / f8 / ...)
+    v_pages: jax.Array,       # [N_blocks, bs, n_kv, hd]
+    block_tables: jax.Array,  # [B, max_blk] int32 — page id per logical block
+    lengths: jax.Array,       # [B] int32 — valid tokens per sequence
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Flash decode over a *paged* KV cache.
+
+    Logical block ``j`` of sequence ``i`` lives in physical page
+    ``block_tables[i, j]``; the block table rides as a scalar-prefetch
+    operand so the page id is known before the HBM→VMEM DMA is issued —
+    the gather happens in the BlockSpec index_map, never as a
+    materialized [B, S] cache.  Everything else (per-sequence length
+    masking, in-kernel narrow-dtype dequant, online-softmax VMEM
+    carries) matches :func:`decode_gqa_kernel`.
+    """
+    b, n_kv, g, hd = q.shape
+    block_s = k_pages.shape[1]
+    max_blk = block_tables.shape[1]
+    grid = (b, max_blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,   # lengths, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_kv, g, hd), lambda i, j, L, T: (i, 0, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, hd),
+                         lambda i, j, L, T: (T[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, hd),
+                         lambda i, j, L, T: (T[i, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_kv, g, hd), lambda i, j, L, T: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, g), jnp.float32),        # running max
+            pltpu.VMEM((n_kv, g), jnp.float32),        # running denom
+            pltpu.VMEM((n_kv, g, hd), jnp.float32),    # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, block_s=block_s, num_kv=n_kv,
+                          groups=g, out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, hd), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      q, k_pages, v_pages)
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_s", "out_dtype", "interpret"))
 def decode_gqa_kernel(

@@ -11,8 +11,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.decode_gqa.decode_gqa import decode_gqa_kernel
-from repro.kernels.decode_gqa.ref import decode_gqa_ref
+from repro.kernels.decode_gqa.decode_gqa import (
+    decode_gqa_kernel,
+    decode_gqa_paged_kernel,
+)
+from repro.kernels.decode_gqa.ref import decode_gqa_paged_ref, decode_gqa_ref
 
 
 def decode_gqa(q, k_cache, v_cache, lengths, *, block_s: int | None = None,
@@ -43,4 +46,40 @@ def decode_gqa(q, k_cache, v_cache, lengths, *, block_s: int | None = None,
                              interpret=interpret)
 
 
-__all__ = ["decode_gqa", "decode_gqa_ref"]
+def decode_gqa_paged(q, k_pages, v_pages, block_tables, lengths, *,
+                     out_dtype=None, interpret: bool | None = None):
+    """Flash-decoding GQA over a paged KV cache.
+
+    q: [B, n_kv, g, hd]; pages [N_blocks, bs, n_kv, hd] (any narrow
+    dtype — dequant happens in-kernel); block_tables [B, max_blk] maps
+    logical block j of sequence i to a physical page; lengths [B] (or
+    scalar) masks ragged tails and whole unused blocks.  Page ids for
+    logical blocks past a sequence's length must still be *valid*
+    indices (point them at a reserved page); their contribution is
+    masked.  Returns [B, n_kv, g, hd].
+
+    Off-TPU the default execution is the pure-jnp paged oracle (gather
+    through the table + dense attend, XLA-fused): the paged grid has
+    B*max_blk cells, so emulating every cell in interpret mode pays
+    O(blocks) Python overhead per call — unlike the O(B)-cell
+    contiguous kernel, which stays on interpret.  Pass
+    ``interpret=True`` to force the kernel (kernel-fidelity tests).
+    """
+    out_dtype = out_dtype or jnp.float32
+    b = q.shape[0]
+    max_tokens = block_tables.shape[1] * k_pages.shape[1]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    lengths = jnp.clip(lengths, 0, max_tokens)
+    if interpret is None and jax.default_backend() == "cpu":
+        # Zero-length rows: match the kernel's emit-zeros guarantee.
+        out = decode_gqa_paged_ref(q, k_pages, v_pages, block_tables,
+                                   lengths, out_dtype=out_dtype)
+        return jnp.where((lengths > 0)[:, None, None, None], out,
+                         jnp.zeros((), out_dtype))
+    return decode_gqa_paged_kernel(q, k_pages, v_pages, block_tables,
+                                   lengths, out_dtype=out_dtype,
+                                   interpret=bool(interpret))
+
+
+__all__ = ["decode_gqa", "decode_gqa_paged", "decode_gqa_paged_ref",
+           "decode_gqa_ref"]

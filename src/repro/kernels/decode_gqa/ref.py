@@ -21,3 +21,16 @@ def decode_gqa_ref(q, k_cache, v_cache, lengths, out_dtype=jnp.float32):
     logit = jnp.where(valid[:, None, None, :], logit, -1e30)
     p = jax.nn.softmax(logit, axis=-1)
     return jnp.einsum("bngs,bsnh->bngh", p, vf).astype(out_dtype)
+
+
+def decode_gqa_paged_ref(q, k_pages, v_pages, block_tables, lengths,
+                         out_dtype=jnp.float32):
+    """Paged oracle: gather pages through the block table into a
+    contiguous [B, max_blk*bs, n_kv, hd] view, then run the dense
+    reference.  q: [B, n_kv, g, hd]; pages [N, bs, n_kv, hd];
+    block_tables [B, max_blk]; lengths [B]."""
+    b, max_blk = block_tables.shape
+    bs = k_pages.shape[1]
+    k = k_pages[block_tables].reshape(b, max_blk * bs, *k_pages.shape[2:])
+    v = v_pages[block_tables].reshape(b, max_blk * bs, *v_pages.shape[2:])
+    return decode_gqa_ref(q, k, v, lengths, out_dtype)

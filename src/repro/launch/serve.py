@@ -1,8 +1,10 @@
-"""Serving launcher: batched requests against a (optionally
-Lama-quantized) model.
+"""Serving launcher: continuous-batching Engine over a paged KV cache.
 
     PYTHONPATH=src python -m repro.launch.serve --arch qwen3-1.7b --tiny \
-        --requests 16 --quant 7
+        --requests 16 --quant 7 --slots 8 --block-size 16
+
+``--bucketed`` runs the legacy length-bucketed contiguous-cache path
+instead (the baseline the engine is measured against).
 """
 
 from __future__ import annotations
@@ -13,7 +15,8 @@ import time
 import numpy as np
 
 from repro.configs import get_config
-from repro.runtime.server import InferenceServer, Request
+from repro.runtime.engine import Engine, EngineConfig, Request
+from repro.runtime.server import InferenceServer
 
 
 def main():
@@ -26,11 +29,17 @@ def main():
     ap.add_argument("--quant", type=int, default=None,
                     help="DNA-TEQ exponent bits (e.g. 7)")
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--slots", type=int, default=8,
+                    help="concurrent decode slots")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="tokens per KV page")
+    ap.add_argument("--kv-dtype", default="float32",
+                    help='e.g. "float8_e4m3fn" for the narrow-byte cache')
+    ap.add_argument("--bucketed", action="store_true",
+                    help="legacy length-bucketed contiguous-cache path")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
-    server = InferenceServer(cfg, quant_bits=args.quant,
-                             max_len=args.max_len)
     rng = np.random.default_rng(0)
     reqs = [
         Request(i, rng.integers(0, cfg.vocab_size,
@@ -38,16 +47,39 @@ def main():
                 max_new_tokens=args.new_tokens)
         for i in range(args.requests)
     ]
-    t0 = time.time()
-    outs = server.generate(reqs)
-    dt = time.time() - t0
+
+    if args.bucketed:
+        server = InferenceServer(cfg, quant_bits=args.quant,
+                                 max_len=args.max_len,
+                                 kv_dtype=args.kv_dtype)
+        t0 = time.time()
+        outs = server.generate_bucketed(reqs)
+        dt = time.time() - t0
+        quant_report = server.quant_report
+        label = "bucketed (legacy contiguous cache)"
+    else:
+        eng = Engine(
+            cfg, quant_bits=args.quant, kv_dtype=args.kv_dtype,
+            engine=EngineConfig(num_slots=args.slots,
+                                block_size=args.block_size,
+                                max_seq_len=max(args.max_len,
+                                                args.prompt_len
+                                                + args.new_tokens)))
+        t0 = time.time()
+        outs = eng.generate(reqs)
+        dt = time.time() - t0
+        quant_report = eng.quant_report
+        label = (f"engine ({args.slots} slots, block {args.block_size}, "
+                 f"peak KV {eng.cache.peak_kv_bytes()/1e6:.2f} MB over "
+                 f"{eng.total_decode_steps} decode steps)")
+
     tokens = sum(len(c.tokens) for c in outs)
     print(f"served {len(outs)} requests, {tokens} tokens in {dt:.2f}s "
-          f"({tokens/dt:.1f} tok/s)")
-    if server.quant_report:
+          f"({tokens/dt:.1f} tok/s) — {label}")
+    if quant_report:
         import statistics as st
-        bits = [b for b, _ in server.quant_report.values()]
-        sqnr = [s for _, s in server.quant_report.values()]
+        bits = [b for b, _ in quant_report.values()]
+        sqnr = [s for _, s in quant_report.values()]
         print(f"quantized {len(bits)} tensors, avg bits {st.mean(bits):.2f}, "
               f"avg SQNR {st.mean(sqnr):.1f} dB")
 

@@ -30,6 +30,11 @@ class ModelAPI:
     decode_step: Callable
     init_cache: Callable
     abstract_cache: Callable
+    # Paged-serving entry points (None for families without them).
+    # These take a repro.runtime.paged_cache.PagedView instead of
+    # owning cache allocation — the Engine's scheduler does.
+    prefill_into_cache: Callable | None = None
+    decode_step_paged: Callable | None = None
 
     def init(self, rng, dtype=None):
         dtype = dtype or jnp.dtype(self.cfg.param_dtype)
@@ -69,6 +74,8 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         decode_step=mod.decode_step,
         init_cache=mod.init_cache,
         abstract_cache=mod.abstract_cache,
+        prefill_into_cache=getattr(mod, "prefill_into_cache", None),
+        decode_step_paged=getattr(mod, "decode_step_paged", None),
     )
 
 

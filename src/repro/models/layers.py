@@ -377,6 +377,47 @@ def mha_decode(
     return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
 
 
+def mha_decode_paged(
+    p: Params,
+    x: jax.Array,                      # [B, 1, D] — one new token
+    cfg: ModelConfig,
+    positions: jax.Array,              # [B, 1] absolute positions
+    k_pages: jax.Array,                # [N_blocks, bs, n_kv, hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array,           # [B, max_blk] int32
+    lengths: jax.Array,                # [B] valid cache entries
+    use_rope: bool = True,
+) -> jax.Array:
+    """Decode-step GQA over a *paged* cache: the block table rides as a
+    scalar-prefetch operand so each page's HBM→VMEM DMA is issued
+    straight from the table — no [B, S] contiguous gather ever
+    materializes.  ``flash_decode=False`` in the policy swaps in the
+    pure-jnp paged oracle (gather + dense attend) for A/B checks."""
+    from repro.kernels.decode_gqa import decode_gqa_paged, decode_gqa_paged_ref
+
+    dt = x.dtype
+    q = ll.dense_general(x, p["wq"], "bsd,dnh->bsnh")
+    if cfg.qk_norm:
+        q = apply_head_rms(p["q_norm"], q)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+    b, s, h, hd = q.shape
+    groups = cfg.num_heads // cfg.num_kv_heads
+    qg = q[:, 0].reshape(b, cfg.num_kv_heads, groups, hd)
+    if ll.get_policy().flash_decode:
+        out = decode_gqa_paged(qg, k_pages, v_pages, block_tables, lengths)
+    else:
+        out = decode_gqa_paged_ref(qg, k_pages, v_pages, block_tables,
+                                   lengths)
+        # the dense oracle softmaxes all-masked rows to a uniform
+        # average; match the kernel's emit-zeros guarantee for
+        # zero-length (inactive) slots
+        out = jnp.where((lengths > 0)[:, None, None, None], out,
+                        jnp.zeros((), out.dtype))
+    out = out.reshape(b, 1, h, hd).astype(dt)
+    return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
+
+
 def self_kv(p: Params, x: jax.Array, cfg: ModelConfig,
             positions: jax.Array, use_rope: bool = True):
     """Project K,V for cache writes (decode path)."""

@@ -205,6 +205,120 @@ def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig):
     return logits, {"k": ks, "v": vs, "pos": pos + 1}
 
 
+# ------------------------------------------------------- paged serving --
+#
+# The engine-facing entry points: instead of *owning* a contiguous
+# [L, B, max_len, ...] cache, these take a PagedView (k_pages/v_pages
+# page pools + per-sequence block tables + lengths — see
+# repro.runtime.paged_cache) and return an updated view.  Memory is the
+# engine's concern; the model only reads/writes through the table.
+
+def _scatter_token_kv(pages, new, blk_idx, off):
+    """Write one token's KV per sequence into its page.
+    pages [N, bs, n_kv, hd]; new [B, n_kv, hd]; blk_idx/off [B]."""
+    return pages.at[blk_idx, off].set(new.astype(pages.dtype))
+
+
+def prefill_into_cache(
+    params,
+    tokens: jax.Array,                 # [B, S_pad] — padded to a block multiple
+    view,                              # PagedView for the admitted rows
+    cfg: ModelConfig,
+):
+    """Run the prompt and scatter its KV into the paged cache.
+
+    ``view.lengths`` carries the *true* prompt lengths; positions at or
+    past a sequence's length are pad tokens whose KV lands either in
+    the tail of the last real page (masked by length until real decode
+    tokens overwrite it) or in the trash page.  Returns
+    (last_logits [B, 1, V] taken at each sequence's true last token,
+    updated view).
+    """
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    bs = view.block_size
+    assert s % bs == 0, (s, bs)
+    nblk = s // bs
+    assert nblk <= view.block_tables.shape[1], (nblk, view.block_tables.shape)
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mask = ("causal", None)
+
+    def body(carry, blk_params):
+        x, aux = carry
+        y, a, (k, v) = _block(blk_params, x, cfg, positions, mask)
+        return (L.constrain_act(y), aux + a), (k, v)
+
+    (x, _aux), (ks, vs) = scan_blocks(
+        body, (x, jnp.zeros((), jnp.float32)), params["blocks"], cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    idx = jnp.clip(view.lengths - 1, 0, s - 1)
+    x_last = jnp.take_along_axis(
+        x, idx[:, None, None].astype(jnp.int32), axis=1)  # [B, 1, D]
+    logits = L.logits_fn(params, x_last, cfg)
+
+    # [L, B, S, n_kv, hd] -> [L, B, nblk, bs, n_kv, hd] page chunks
+    l, _, _, kvh, hd = ks.shape
+    kc = ks.reshape(l, b, nblk, bs, kvh, hd).astype(view.k_pages.dtype)
+    vc = vs.reshape(l, b, nblk, bs, kvh, hd).astype(view.v_pages.dtype)
+    tbl = view.block_tables[:, :nblk]                     # [B, nblk]
+    k_pages = view.k_pages.at[:, tbl].set(kc)
+    v_pages = view.v_pages.at[:, tbl].set(vc)
+    return logits, view._replace(k_pages=k_pages, v_pages=v_pages)
+
+
+def decode_step_paged(params, view, tokens: jax.Array, active: jax.Array,
+                      cfg: ModelConfig):
+    """One continuous-batching decode step over the paged cache.
+
+    tokens: [B, 1] — last sampled token per slot; active: [B] bool.
+    Per slot, the new token's KV is scattered to page
+    ``table[len // bs]``, offset ``len % bs`` (inactive slots write the
+    trash page), then attention runs through the block-table
+    flash-decode kernel with per-slot lengths (+1 for the token just
+    written; 0 for inactive slots, which therefore return zeros).
+    Returns (logits [B, 1, V], updated view with active lengths +1).
+    """
+    x = L.constrain_act(L.embed_tokens(params["embed"], tokens, cfg))
+    b, s, _ = x.shape
+    assert s == 1, s
+    bs = view.block_size
+    pos = view.lengths                                     # [B]
+    positions = pos[:, None]
+    blk_col = jnp.clip(pos // bs, 0, view.block_tables.shape[1] - 1)
+    blk_idx = jnp.where(
+        active,
+        jnp.take_along_axis(view.block_tables, blk_col[:, None], axis=1)[:, 0],
+        0)                                                 # trash page
+    off = jnp.where(active, pos % bs, 0)
+    attn_lengths = jnp.where(active, pos + 1, 0).astype(jnp.int32)
+
+    def body(carry, layer_in):
+        x, = carry
+        blk_params, k_pages_l, v_pages_l = layer_in
+        h = L.apply_norm(blk_params["ln1"], x, cfg)
+        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions)
+        k_pages_l = _scatter_token_kv(k_pages_l, k_new[:, 0], blk_idx, off)
+        v_pages_l = _scatter_token_kv(v_pages_l, v_new[:, 0], blk_idx, off)
+        attn = L.mha_decode_paged(blk_params["attn"], h, cfg, positions,
+                                  k_pages_l, v_pages_l, view.block_tables,
+                                  attn_lengths)
+        x = x + attn
+        h = L.apply_norm(blk_params["ln2"], x, cfg)
+        if cfg.is_moe:
+            y, _ = M.apply_moe(blk_params["moe"], h, cfg)
+        else:
+            y = L.apply_mlp(blk_params["mlp"], h, cfg)
+        return (L.constrain_act(x + y),), (k_pages_l, v_pages_l)
+
+    (x,), (ks, vs) = scan_blocks(
+        body, (x,), (params["blocks"], view.k_pages, view.v_pages), cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.logits_fn(params, x, cfg)
+    new_lengths = jnp.where(active, pos + 1, pos).astype(jnp.int32)
+    return logits, view._replace(k_pages=ks, v_pages=vs,
+                                 lengths=new_lengths)
+
+
 # ---------------------------------------------------------------- loss --
 
 def lm_loss(params, batch: dict, cfg: ModelConfig) -> tuple[jax.Array, dict]:

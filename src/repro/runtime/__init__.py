@@ -1,7 +1,18 @@
+from repro.runtime.engine import (  # noqa: F401
+    Completion,
+    Engine,
+    EngineConfig,
+    Request,
+)
 from repro.runtime.fault_tolerance import (  # noqa: F401
     PreemptionSignal,
     StragglerWatchdog,
     with_retries,
 )
-from repro.runtime.server import InferenceServer, Request  # noqa: F401
+from repro.runtime.paged_cache import (  # noqa: F401
+    BlockAllocator,
+    PagedKVCache,
+    PagedView,
+)
+from repro.runtime.server import InferenceServer  # noqa: F401
 from repro.runtime.trainer import TrainConfig, Trainer  # noqa: F401

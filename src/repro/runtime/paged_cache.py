@@ -1,0 +1,210 @@
+"""Paged KV cache: fixed-size blocks + per-sequence block tables.
+
+The contiguous serving cache pays ``O(max_len)`` HBM per request the
+moment it is admitted — exactly the decoded-operand data movement the
+PuM literature says dominates modern workloads.  Here KV lives in a
+pool of fixed-size pages (``[num_layers, num_blocks, block_size, n_kv,
+hd]``); a sequence owns an ordered list of page ids (its *block
+table*), pages are handed out by a free-list allocator as the sequence
+actually grows, and retirement returns them to the pool — memory
+scales with live tokens, not ``max_len``.
+
+Layout / invariants
+- Page 0 is the **trash page**: never allocated, it absorbs writes
+  from inactive slots and prefill padding, and block-table entries past
+  a sequence's allocation point at it so every gather index is valid.
+  Nothing masked-in ever reads it.
+- Logical block ``j`` of a sequence holds tokens ``[j*bs, (j+1)*bs)``;
+  ``block_tables[slot, j]`` is its physical page.  Token ``t`` lives at
+  page ``block_tables[slot, t // bs]``, offset ``t % bs``.
+- The allocator's free list plus every live sequence's blocks plus the
+  trash page partition ``range(num_blocks)`` at all times; admission
+  *reservations* guarantee mid-decode allocation never fails.
+
+Device state (``k_pages``/``v_pages``) is functionally updated inside
+jitted prefill/decode steps; the host keeps the allocator, block
+tables, and lengths, and re-materializes the small int32 view tensors
+each step.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+TRASH_PAGE = 0
+
+
+class PagedView(NamedTuple):
+    """The jit-facing slice of the cache: pure arrays, a valid pytree.
+
+    k_pages/v_pages: [L, num_blocks, block_size, n_kv, hd]
+    block_tables:    [B, max_blocks_per_seq] int32 (physical page ids)
+    lengths:         [B] int32 — tokens already present per sequence
+    """
+
+    k_pages: jax.Array
+    v_pages: jax.Array
+    block_tables: jax.Array
+    lengths: jax.Array
+
+    @property
+    def block_size(self) -> int:
+        return self.k_pages.shape[2]
+
+
+class BlockAllocator:
+    """Free-list page allocator with admission reservations.
+
+    ``reserve(n)`` earmarks capacity at admission time (the scheduler
+    reserves a sequence's worst case, ``ceil((prompt+max_new)/bs)``);
+    ``alloc(n)`` consumes reserved pages as the sequence actually
+    grows.  Invariant: ``len(free) >= reserved`` always, so a reserved
+    allocation cannot fail mid-decode.
+    """
+
+    def __init__(self, num_blocks: int):
+        if num_blocks < 2:
+            raise ValueError("need >= 2 blocks (page 0 is reserved trash)")
+        self.num_blocks = num_blocks
+        self._free: list[int] = list(range(num_blocks - 1, TRASH_PAGE, -1))
+        self._reserved = 0
+        self.peak_in_use = 0
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def blocks_in_use(self) -> int:
+        return (self.num_blocks - 1) - len(self._free)
+
+    @property
+    def reserved(self) -> int:
+        return self._reserved
+
+    def can_reserve(self, n: int) -> bool:
+        return n <= len(self._free) - self._reserved
+
+    def reserve(self, n: int) -> None:
+        if not self.can_reserve(n):
+            raise RuntimeError(
+                f"reservation of {n} blocks exceeds free capacity "
+                f"({len(self._free)} free, {self._reserved} reserved)")
+        self._reserved += n
+
+    def release_reservation(self, n: int) -> None:
+        assert 0 <= n <= self._reserved, (n, self._reserved)
+        self._reserved -= n
+
+    def alloc(self, n: int = 1, *, reserved: bool = True) -> list[int]:
+        """Pop ``n`` pages; ``reserved=True`` consumes reservations."""
+        if reserved:
+            if n > self._reserved:
+                raise RuntimeError(f"alloc({n}) exceeds reservation "
+                                   f"({self._reserved})")
+            self._reserved -= n
+        elif n > len(self._free) - self._reserved:
+            raise RuntimeError(f"alloc({n}) exceeds unreserved capacity")
+        out = [self._free.pop() for _ in range(n)]
+        self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
+        return out
+
+    def free(self, blocks: list[int]) -> None:
+        for b in blocks:
+            assert b != TRASH_PAGE and b not in self._free, b
+            self._free.append(b)
+
+
+class PagedKVCache:
+    """Page pool + per-slot block tables for a fixed set of decode slots."""
+
+    def __init__(self, *, num_layers: int, num_kv_heads: int, head_dim: int,
+                 num_slots: int, block_size: int, num_blocks: int,
+                 max_blocks_per_seq: int, dtype=jnp.float32):
+        self.block_size = block_size
+        self.num_slots = num_slots
+        self.max_blocks_per_seq = max_blocks_per_seq
+        self.dtype = jnp.dtype(dtype)
+        shape = (num_layers, num_blocks, block_size, num_kv_heads, head_dim)
+        self.k_pages = jnp.zeros(shape, self.dtype)
+        self.v_pages = jnp.zeros(shape, self.dtype)
+        self.allocator = BlockAllocator(num_blocks)
+        # host-side metadata; rows of unused slots point at the trash page
+        self.block_tables = np.full((num_slots, max_blocks_per_seq),
+                                    TRASH_PAGE, np.int32)
+        self.lengths = np.zeros((num_slots,), np.int32)
+        self.slot_blocks: list[list[int]] = [[] for _ in range(num_slots)]
+
+    # ------------------------------------------------------------ geometry
+    def blocks_for(self, tokens: int) -> int:
+        return max(1, math.ceil(tokens / self.block_size))
+
+    @property
+    def bytes_per_block(self) -> int:
+        # K and V page for every layer
+        l, _, bs, kv, hd = self.k_pages.shape
+        return 2 * l * bs * kv * hd * self.dtype.itemsize
+
+    def kv_bytes_in_use(self) -> int:
+        return self.allocator.blocks_in_use * self.bytes_per_block
+
+    def peak_kv_bytes(self) -> int:
+        return self.allocator.peak_in_use * self.bytes_per_block
+
+    @staticmethod
+    def contiguous_bytes(num_seqs: int, max_len: int, num_layers: int,
+                         num_kv_heads: int, head_dim: int, dtype) -> int:
+        """Footprint of the old `[L, B, max_len, n_kv, hd]` x2 cache."""
+        return (2 * num_layers * num_seqs * max_len * num_kv_heads
+                * head_dim * jnp.dtype(dtype).itemsize)
+
+    # ------------------------------------------------------------ slot ops
+    def bind_slot(self, slot: int, prompt_tokens: int) -> None:
+        """Allocate pages covering the prompt and install the table row."""
+        assert not self.slot_blocks[slot], "slot already bound"
+        blocks = self.allocator.alloc(self.blocks_for(prompt_tokens))
+        self.slot_blocks[slot] = blocks
+        self.block_tables[slot, :] = TRASH_PAGE
+        self.block_tables[slot, : len(blocks)] = blocks
+        self.lengths[slot] = prompt_tokens
+
+    def ensure_capacity(self, slot: int) -> None:
+        """Grow the slot by one page iff the next write crosses into an
+        unallocated logical block (lazy, reservation-backed)."""
+        pos = int(self.lengths[slot])
+        owned = len(self.slot_blocks[slot])
+        if pos == owned * self.block_size:
+            if owned >= self.max_blocks_per_seq:
+                raise RuntimeError(
+                    f"slot {slot} exceeded max_blocks_per_seq={owned}")
+            (blk,) = self.allocator.alloc(1)
+            self.slot_blocks[slot].append(blk)
+            self.block_tables[slot, owned] = blk
+
+    def release_slot(self, slot: int) -> int:
+        """Retire a sequence: pages go back to the free list."""
+        blocks = self.slot_blocks[slot]
+        self.allocator.free(blocks)
+        self.slot_blocks[slot] = []
+        self.block_tables[slot, :] = TRASH_PAGE
+        self.lengths[slot] = 0
+        return len(blocks)
+
+    # ------------------------------------------------------------ views
+    def view(self, slots: list[int] | None = None) -> PagedView:
+        """Device view of all slots (decode) or a subset (prefill)."""
+        bt, ln = self.block_tables, self.lengths
+        if slots is not None:
+            bt, ln = bt[slots], ln[slots]
+        return PagedView(self.k_pages, self.v_pages,
+                         jnp.asarray(bt), jnp.asarray(ln))
+
+    def update_pages(self, view: PagedView) -> None:
+        """Adopt page arrays returned by a jitted prefill/decode step."""
+        self.k_pages = view.k_pages
+        self.v_pages = view.v_pages

@@ -1,21 +1,26 @@
-"""Batched inference server (the paper's kind: LamaAccel accelerates
-LLM inference).
+"""Batched inference server — compatibility shim over the Engine.
 
-Length-bucketed batched prefill + synchronous batched greedy decode with
-per-request stop handling.  Weights may be served as DNA-TEQ codes
-(``quant_bits``) — the paper's technique as a serving feature: codes in
-HBM (1 B/param), 256-entry decode LUT resident per matmul, every matmul
-dispatched through the fused LUT-dequant kernel (the FusedPolicy
-default).  The decode step runs the flash-decoding ``decode_gqa`` kernel
-over the cache; ``kv_dtype="float8_e4m3fn"`` stores the KV cache in
-8-bit floats that are dequantized *inside* the kernel, after the
-HBM->VMEM DMA — narrow bytes are what actually cross HBM.  ``max_len``
-may be any value; cache views pad to the kernel block internally.
+``InferenceServer.generate`` keeps its synchronous signature but is
+re-implemented on top of :class:`repro.runtime.engine.Engine`
+(continuous batching over a paged KV cache): requests are submitted to
+an engine sized from the request set and drained, so per-request
+timings are honest (own prefill stamp, decode time only for the steps
+the request was active in) and a retired request stops consuming
+decode compute instead of riding its bucket to ``max(max_new_tokens)``.
+
+Weights may be served as DNA-TEQ codes (``quant_bits``) — codes in HBM
+(1 B/param), every matmul dispatched through the fused LUT-dequant
+kernel.  ``kv_dtype="float8_e4m3fn"`` stores KV pages in 8-bit floats
+dequantized *inside* the decode kernel, after the HBM->VMEM DMA.
+
+Families the Engine does not cover (hybrid/rwkv/encdec, stub-frontend
+VLMs) fall back to the legacy length-bucketed contiguous-cache path,
+which is also kept as :meth:`generate_bucketed` — the measured baseline
+for the paged engine and the numerical reference in tests.
 """
 
 from __future__ import annotations
 
-import dataclasses
 import time
 from collections import defaultdict
 from typing import Sequence
@@ -27,35 +32,26 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import lama_layers as ll
 from repro.models import api as mapi
+from repro.runtime.engine import Completion, Engine, EngineConfig, Request
 
-
-@dataclasses.dataclass
-class Request:
-    uid: int
-    prompt: np.ndarray            # [S] int32
-    max_new_tokens: int = 16
-    stop_token: int | None = None
-
-
-@dataclasses.dataclass
-class Completion:
-    uid: int
-    tokens: np.ndarray
-    prefill_s: float
-    decode_s: float
+__all__ = ["InferenceServer", "Request", "Completion"]
 
 
 class InferenceServer:
     def __init__(self, cfg: ModelConfig, params=None, rng_seed: int = 0,
                  quant_bits: int | None = None, max_len: int = 512,
-                 kv_dtype: str | jnp.dtype = "float32"):
+                 kv_dtype: str | jnp.dtype = "float32",
+                 num_slots: int = 8, block_size: int = 16):
         """``kv_dtype``: KV-cache storage dtype — "float32"/"bfloat16"
         for full fidelity, "float8_e4m3fn" for the narrow-byte cache
-        (dequantized in-kernel by ``decode_gqa``)."""
+        (dequantized in-kernel by ``decode_gqa``).  ``num_slots`` /
+        ``block_size`` size the paged engine behind :meth:`generate`."""
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         self.max_len = max_len
         self.kv_dtype = jnp.dtype(kv_dtype)
+        self.num_slots = num_slots
+        self.block_size = block_size
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
                                    dtype=jnp.float32)
@@ -64,6 +60,8 @@ class InferenceServer:
             params, self.quant_report = ll.quantize_tree(
                 params, quant_bits, axes=self.api.logical_axes())
         self.params = params
+        self.last_engine: Engine | None = None   # stats of the last generate
+        self._engine_max_seq = max_len           # grows monotonically
         self._prefill = jax.jit(
             lambda p, t, pe: self.api.prefill(
                 p, t, cfg, self.max_len, prefix_embeds=pe,
@@ -73,6 +71,38 @@ class InferenceServer:
             lambda p, c, t: self.api.decode_step(p, c, t, cfg))
 
     # ------------------------------------------------------------------
+    def make_engine(self, requests: Sequence[Request]) -> Engine:
+        """An Engine for this request set.  Slot count and (for streams
+        that fit ``max_len``) the per-sequence cap are fixed by the
+        server, NOT the request set, so repeated ``generate`` calls
+        keep the page-pool/batch shapes stable; the engine itself (page
+        pools included) is cached and reused while the config holds —
+        a request exceeding ``max_len`` widens the pool, and the
+        widened size sticks (monotonic) so later normal batches keep
+        reusing the widened engine instead of re-allocating."""
+        max_seq = max((len(r.prompt) + r.max_new_tokens for r in requests),
+                      default=self.max_len)
+        self._engine_max_seq = max(self._engine_max_seq, max_seq,
+                                   self.block_size)
+        ec = EngineConfig(
+            num_slots=self.num_slots,
+            block_size=self.block_size,
+            max_seq_len=self._engine_max_seq)
+        if self.last_engine is None or self.last_engine.engine_cfg != ec:
+            self.last_engine = Engine(self.cfg, params=self.params,
+                                      engine=ec, kv_dtype=self.kv_dtype)
+        return self.last_engine
+
+    def generate(self, requests: Sequence[Request]) -> list[Completion]:
+        """Serve via the paged continuous-batching Engine (greedy);
+        legacy bucketed fallback for non-decoder families."""
+        if not requests:
+            return []
+        if not Engine.supports(self.cfg):
+            return self.generate_bucketed(requests)
+        return self.make_engine(requests).generate(requests)
+
+    # ------------------------------------------- legacy bucketed path --
     def _frames_for(self, batch: int, seq: int):
         if self.cfg.family == "encdec":
             rng = np.random.default_rng(0)
@@ -86,8 +116,12 @@ class InferenceServer:
                                  self.cfg.d_model)) * 0.02, jnp.float32)
         return None
 
-    def generate(self, requests: Sequence[Request]) -> list[Completion]:
-        """Length-bucketed batched generation (greedy)."""
+    def generate_bucketed(self, requests: Sequence[Request]) -> list[Completion]:
+        """The pre-engine path: length-bucketed batched prefill +
+        lockstep batched greedy decode over a contiguous cache.  Every
+        request in a bucket decodes ``max(max_new_tokens)`` steps and
+        shares one prefill/decode stamp — kept as the measured baseline
+        and numerical reference for the engine."""
         buckets: dict[int, list[Request]] = defaultdict(list)
         for r in requests:
             buckets[len(r.prompt)].append(r)
@@ -123,5 +157,6 @@ class InferenceServer:
                 hits = np.where(seq == r.stop_token)[0]
                 if hits.size:
                     seq = seq[: hits[0] + 1]
-            outs.append(Completion(r.uid, seq, t_prefill, t_decode))
+            outs.append(Completion(r.uid, seq, t_prefill, t_decode,
+                                   decode_steps=max(max_new - 1, 0)))
         return outs
