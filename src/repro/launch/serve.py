@@ -37,20 +37,31 @@ def main():
                     help='e.g. "float8_e4m3fn" for the narrow-byte cache')
     ap.add_argument("--bucketed", action="store_true",
                     help="legacy length-bucketed contiguous-cache path")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable radix-tree KV reuse across requests")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of system prompt shared by all requests "
+                         "(exercises the prefix cache)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
     rng = np.random.default_rng(0)
+    shared = rng.integers(0, cfg.vocab_size,
+                          args.shared_prefix).astype(np.int32)
     reqs = [
-        Request(i, rng.integers(0, cfg.vocab_size,
-                                args.prompt_len).astype(np.int32),
+        Request(i, np.concatenate(
+            [shared, rng.integers(0, cfg.vocab_size,
+                                  args.prompt_len).astype(np.int32)]),
                 max_new_tokens=args.new_tokens)
         for i in range(args.requests)
     ]
 
     if args.bucketed:
         server = InferenceServer(cfg, quant_bits=args.quant,
-                                 max_len=args.max_len,
+                                 max_len=max(args.max_len,
+                                             args.shared_prefix
+                                             + args.prompt_len
+                                             + args.new_tokens),
                                  kv_dtype=args.kv_dtype)
         t0 = time.time()
         outs = server.generate_bucketed(reqs)
@@ -63,8 +74,10 @@ def main():
             engine=EngineConfig(num_slots=args.slots,
                                 block_size=args.block_size,
                                 max_seq_len=max(args.max_len,
-                                                args.prompt_len
-                                                + args.new_tokens)))
+                                                args.shared_prefix
+                                                + args.prompt_len
+                                                + args.new_tokens),
+                                prefix_cache=not args.no_prefix_cache))
         t0 = time.time()
         outs = eng.generate(reqs)
         dt = time.time() - t0
@@ -76,6 +89,12 @@ def main():
     tokens = sum(len(c.tokens) for c in outs)
     print(f"served {len(outs)} requests, {tokens} tokens in {dt:.2f}s "
           f"({tokens/dt:.1f} tok/s) — {label}")
+    if not args.bucketed and eng.prefix_stats is not None:
+        ps = eng.prefix_stats
+        print(f"prefix cache: {ps.hits}/{ps.queries} hits, "
+              f"{ps.tokens_reused} prompt tokens served from cache "
+              f"({ps.token_hit_rate:.0%}), {ps.evicted_pages} evicted, "
+              f"{eng.preemptions} preemptions")
     if quant_report:
         import statistics as st
         bits = [b for b, _ in quant_report.values()]

@@ -1,4 +1,5 @@
-"""Serving engine: continuous batching over a paged KV cache.
+"""Serving engine: continuous batching over a paged, prefix-cached KV
+cache.
 
 The old ``InferenceServer.generate`` was a synchronous, length-bucketed
 batch call over a contiguous ``[B, max_len, n_kv, hd]`` cache: every
@@ -9,24 +10,39 @@ mid-decode.  The :class:`Engine` replaces that with
 - ``submit(request) -> handle``: enqueue; nothing runs yet.
 - ``step() -> [Completion]``: one scheduler tick — admit waiting
   prefills into free decode slots, run ONE batched decode step across
-  all active slots, retire finished sequences (freeing their pages).
+  all active slots, retire finished sequences.
 - ``stream(handle)``: iterator of tokens, driving ``step`` on demand.
 - ``run()``: drain everything (the batch-call convenience).
 
 KV lives in a :class:`~repro.runtime.paged_cache.PagedKVCache`; the
 decode step attends through the block-table flash-decode kernel
-(``decode_gqa_paged``), so paging never materializes a contiguous
-cache and narrow KV dtypes (``float8_e4m3fn``) still dequantize
+(``decode_gqa_paged``) with the table sliced to the live column count,
+so paging never materializes a contiguous cache, dead pages cost no
+grid steps, and narrow KV dtypes (``float8_e4m3fn``) still dequantize
 in-kernel after the HBM→VMEM DMA.
 
-Scheduling policy (deliberately simple, FIFO):
-- admission requires a free slot AND a *reservation* of the sequence's
-  worst-case page count ``ceil((prompt + max_new) / block_size)`` — so
-  a running sequence can always grow to its limit without eviction;
-- pages are allocated lazily as the sequence actually crosses block
-  boundaries; retirement releases pages and any unused reservation;
-- prompts are padded to a small bucket ladder (block-multiple powers
-  of two) so prefill compiles are shared across lengths.
+Prefix cache (the byte-not-moved tier): retirement *inserts* finished
+sequences' pages into a radix trie
+(:class:`~repro.runtime.prefix_cache.PrefixCache`) keyed by token
+content instead of freeing them.  Admission walks the trie, pins the
+longest cached prefix (refcount++), splices those page ids into the
+new sequence's block table, and prefills only the uncached tail (RoPE
+positions offset by the hit length; the boundary page is copied before
+the first write — shared pages are never mutated).  Re-prefilling a
+shared system prompt thus costs zero FLOPs and zero HBM traffic — the
+access is never issued, which the PuM literature identifies as the only
+1000x-class win.
+
+Scheduling policy (FIFO with reservation-or-preempt):
+- admission needs a free slot and pages for the *prompt tail only* —
+  no worst-case reservation; up to ``max_batched_prefill`` same-bucket
+  queue heads coalesce into one batched prefill call per tick;
+- when the free list runs dry (admission or mid-decode growth), the
+  scheduler first LRU-evicts unpinned trie pages, then preempts the
+  youngest running sequence (pages released, sequence re-queued to be
+  recomputed — greedy decoding makes the recompute token-identical);
+- retirement moves pages into the trie (or frees them when the prefix
+  cache is disabled).
 """
 
 from __future__ import annotations
@@ -46,6 +62,7 @@ from repro.configs.base import ModelConfig
 from repro.core import lama_layers as ll
 from repro.models import api as mapi
 from repro.runtime.paged_cache import PagedKVCache
+from repro.runtime.prefix_cache import PrefixCache, PrefixNode
 
 
 @dataclasses.dataclass
@@ -71,6 +88,8 @@ class EngineConfig:
     block_size: int = 16          # tokens per KV page
     max_seq_len: int = 512        # per-sequence cap (prompt + generated)
     num_blocks: int | None = None  # page-pool size; None -> full occupancy
+    prefix_cache: bool = True     # radix-tree KV reuse across requests
+    max_batched_prefill: int = 4  # same-bucket admissions per prefill call
 
 
 _QUEUED, _RUNNING, _FINISHED = "queued", "running", "finished"
@@ -91,11 +110,12 @@ def _donate(*argnums):
 
 @functools.lru_cache(maxsize=None)
 def _jit_prefill(prefill_fn):
-    def fn(params, tokens, view, cfg):
-        logits, view = prefill_fn(params, tokens, view, cfg)
+    def fn(params, tokens, view, prefix_lens, cfg, prefix_blocks):
+        logits, view = prefill_fn(params, tokens, view, cfg, prefix_lens,
+                                  prefix_blocks=prefix_blocks)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return nxt, view
-    return jax.jit(fn, static_argnums=(3,), donate_argnums=_donate(2))
+    return jax.jit(fn, static_argnums=(4, 5), donate_argnums=_donate(2))
 
 
 @functools.lru_cache(maxsize=None)
@@ -110,14 +130,26 @@ def _jit_decode(step_fn):
 @dataclasses.dataclass
 class _SeqState:
     request: Request
+    seq_no: int = 0               # submission order (preemption priority)
     status: str = _QUEUED
     slot: int = -1
     tokens: list[int] = dataclasses.field(default_factory=list)
     next_token: int = 0
-    reserved_remaining: int = 0
+    prefix_len: int = 0           # prompt tokens served from the trie
+    pinned: list[PrefixNode] = dataclasses.field(default_factory=list)
+    preemptions: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
     decode_steps: int = 0
+
+    def full_prompt(self) -> np.ndarray:
+        """Prompt plus tokens generated before a preemption: greedy
+        decoding is deterministic, so re-prefilling this continues the
+        stream token-identically."""
+        if not self.tokens:
+            return np.asarray(self.request.prompt, np.int32)
+        return np.concatenate([np.asarray(self.request.prompt, np.int32),
+                               np.asarray(self.tokens, np.int32)])
 
     def completion(self) -> Completion:
         return Completion(self.request.uid,
@@ -166,11 +198,18 @@ class Engine:
             head_dim=cfg.resolved_head_dim, num_slots=ec.num_slots,
             block_size=ec.block_size, num_blocks=num_blocks,
             max_blocks_per_seq=max_blk, dtype=self.kv_dtype)
+        self.prefix: PrefixCache | None = (
+            PrefixCache(self.cache.allocator, ec.block_size)
+            if ec.prefix_cache else None)
 
         self._queue: deque[_SeqState] = deque()
         self._slots: list[_SeqState | None] = [None] * ec.num_slots
         self._states: dict[int, _SeqState] = {}
+        self._seq_counter = 0
         self.total_decode_steps = 0
+        self.prefill_tokens_computed = 0
+        self.prefill_batches = 0      # batched prefill dispatches issued
+        self.preemptions = 0
 
         self._prefill = _jit_prefill(self.api.prefill_into_cache)
         self._decode = _jit_decode(self.api.decode_step_paged)
@@ -186,7 +225,8 @@ class Engine:
                 f"request {request.uid}: prompt {plen} + max_new "
                 f"{request.max_new_tokens} exceeds max_seq_len "
                 f"{self.engine_cfg.max_seq_len}")
-        st = _SeqState(request)
+        st = _SeqState(request, seq_no=self._seq_counter)
+        self._seq_counter += 1
         self._states[request.uid] = st
         self._queue.append(st)
         return request.uid
@@ -207,9 +247,15 @@ class Engine:
                     "blocks than the pool can ever free")
             return finished
 
-        # grow any sequence whose next write crosses a block boundary
-        for i, _ in active:
-            self._slots[i].reserved_remaining -= self._grow(i)
+        # grow any sequence whose next write crosses a block boundary —
+        # oldest first, so page pressure falls on the youngest (it is
+        # the one evicted/preempted if the free list runs dry)
+        for i, st in sorted(active, key=lambda t: t[1].seq_no):
+            if self._slots[i] is st:     # not preempted earlier this tick
+                self._grow(i)
+        active = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        if not active:
+            return finished
 
         ec = self.engine_cfg
         tokens = np.zeros((ec.num_slots, 1), np.int32)
@@ -220,8 +266,8 @@ class Engine:
 
         t0 = time.time()
         nxt_dev, view = self._decode(
-            self.params, self.cache.view(), jnp.asarray(tokens),
-            jnp.asarray(active_mask), self.cfg)
+            self.params, self.cache.view(cols=self._live_cols(active)),
+            jnp.asarray(tokens), jnp.asarray(active_mask), self.cfg)
         nxt = np.asarray(nxt_dev)   # blocks until the step is done
         dt = time.time() - t0
         self.cache.update_pages(view)
@@ -281,6 +327,21 @@ class Engine:
             self.submit(r)
         return self.run()
 
+    # ------------------------------------------------------- diagnostics
+    @property
+    def prefix_stats(self):
+        return self.prefix.stats if self.prefix is not None else None
+
+    def check_partition(self) -> None:
+        """Assert the page-partition invariant: free ∪ slot-owned ∪
+        trie ∪ {trash} is an exact, disjoint cover with consistent
+        refcounts.  Cheap enough to call every tick in tests."""
+        if self.prefix is not None:
+            self.cache.audit_partition(self.prefix.pages(),
+                                       self.prefix.pins())
+        else:
+            self.cache.audit_partition(set(), {})
+
     # ---------------------------------------------------------- scheduler
     def _should_stop(self, st: _SeqState) -> bool:
         r = st.request
@@ -289,18 +350,92 @@ class Engine:
                     and st.tokens[-1] == r.stop_token))
 
     def _retire(self, slot: int) -> Completion:
+        """Finish a sequence.  With the prefix cache on, its pages are
+        inserted into the trie (keyed by the token content they hold)
+        instead of freed — the next request sharing the prefix skips
+        both the FLOPs and the HBM writes."""
         st = self._slots[slot]
         self._slots[slot] = None
-        self.cache.release_slot(slot)
-        self.cache.allocator.release_reservation(st.reserved_remaining)
-        st.reserved_remaining = 0
+        if self.prefix is None:
+            self.cache.release_slot(slot)
+        else:
+            content_len = int(self.cache.lengths[slot])
+            content = st.full_prompt()[:content_len]
+            shared = set(self.cache.slot_shared[slot])
+            blocks = self.cache.clear_slot(slot)
+            self.prefix.insert(content, blocks, shared)
+            self.prefix.unpin(st.pinned)
+            st.pinned = []
         st.status = _FINISHED
         return st.completion()
 
-    def _grow(self, slot: int) -> int:
-        before = self.cache.allocator.blocks_in_use
-        self.cache.ensure_capacity(slot)
-        return self.cache.allocator.blocks_in_use - before
+    def _preempt(self, slot: int) -> None:
+        """Release a running sequence's pages and re-queue it at the
+        front; its prompt *plus tokens generated so far* re-prefill on
+        re-admission, so greedy output is unchanged."""
+        st = self._slots[slot]
+        self._slots[slot] = None
+        self.cache.release_slot(slot)
+        if self.prefix is not None:
+            self.prefix.unpin(st.pinned)
+        st.pinned = []
+        st.prefix_len = 0
+        st.slot = -1
+        st.status = _QUEUED
+        st.preemptions += 1
+        self.preemptions += 1
+        self._queue.appendleft(st)
+
+    def _make_room(self, need: int, seq_no: int) -> bool:
+        """Eviction ladder: free list -> LRU-evict unpinned trie pages
+        -> preempt the youngest running sequence submitted after
+        ``seq_no``.  Returns False if ``need`` pages cannot be freed."""
+        alloc = self.cache.allocator
+        while alloc.free_blocks < need:
+            if (self.prefix is not None
+                    and self.prefix.evict(need - alloc.free_blocks)):
+                continue
+            victim = None
+            for st in self._slots:
+                if (st is not None and st.seq_no > seq_no
+                        and (victim is None or st.seq_no > victim.seq_no)):
+                    victim = st
+            if victim is None:
+                return False
+            self._preempt(victim.slot)
+        return True
+
+    def _grow(self, slot: int) -> None:
+        """Allocate the next page iff this tick's write crosses a block
+        boundary; under pressure, evict/preempt (or, as a last resort,
+        preempt *this* sequence) rather than fail."""
+        st = self._slots[slot]
+        pos = int(self.cache.lengths[slot])
+        bs = self.engine_cfg.block_size
+        if pos == len(self.cache.slot_blocks[slot]) * bs:
+            if not self._make_room(1, st.seq_no):
+                if any(s is not None and s is not st for s in self._slots):
+                    self._preempt(slot)   # youngest of all: yield the pool
+                    return
+                raise RuntimeError(
+                    f"KV pool too small: sequence {st.request.uid} cannot "
+                    f"grow past {pos} tokens and nothing is evictable")
+            self.cache.ensure_capacity(slot, reserved=False)
+        # decode never writes a shared page: the boundary page was
+        # copy-on-written at admission, later pages are fresh allocs
+        page = self.cache.block_tables[slot, pos // bs]
+        assert page not in self.cache.slot_shared[slot], (slot, pos, page)
+
+    def _live_cols(self, active) -> int:
+        """Block-table columns the decode step actually needs: enough
+        to cover every live sequence's cache plus this tick's write,
+        rounded up a pow2 ladder so compiles are shared.  Dead columns
+        cost the paged kernel real grid steps — slicing them off makes
+        short sequences pay for short tables."""
+        need = max(int(self.cache.lengths[i]) // self.engine_cfg.block_size
+                   + 1 for i, _ in active)
+        return min(1 << math.ceil(math.log2(need)),
+                   self.cache.max_blocks_per_seq)
 
     def _bucket_len(self, plen: int) -> int:
         """Pad prompts up a pow2 ladder (block-size multiples) so a
@@ -311,43 +446,147 @@ class Engine:
         cap = self.cache.max_blocks_per_seq * bs
         return min(max(padded, bs), cap)
 
-    def _admit(self) -> list[Completion]:
-        """FIFO admission: free slot + worst-case page reservation."""
-        finished: list[Completion] = []
-        while self._queue and None in self._slots:
-            st = self._queue[0]
-            r = st.request
-            need = self.cache.blocks_for(len(r.prompt) + r.max_new_tokens)
-            if need > self.cache.max_blocks_per_seq:
-                raise RuntimeError(
-                    f"request {r.uid} needs {need} blocks > "
-                    f"max_blocks_per_seq {self.cache.max_blocks_per_seq}")
-            if not self.cache.allocator.can_reserve(need):
-                break   # head-of-line blocks until pages free up
-            self._queue.popleft()
-            slot = self._slots.index(None)
-            self.cache.allocator.reserve(need)
-            self.cache.bind_slot(slot, len(r.prompt))
-            st.reserved_remaining = need - len(self.cache.slot_blocks[slot])
-            st.slot, st.status = slot, _RUNNING
-            self._slots[slot] = st
+    def _pcap_bucket(self, n_nodes: int) -> int:
+        """Static prefix-gather width (table columns) for a hit of
+        ``n_nodes`` pages, bucketed pow2 to bound prefill compiles."""
+        if n_nodes == 0:
+            return 0
+        return min(1 << math.ceil(math.log2(n_nodes)),
+                   self.cache.max_blocks_per_seq)
 
-            plen = len(r.prompt)
-            s_pad = self._bucket_len(plen)
-            toks = np.zeros((1, s_pad), np.int32)
-            toks[0, :plen] = r.prompt
-            t0 = time.time()
-            nxt_dev, view = self._prefill(
-                self.params, jnp.asarray(toks),
-                self.cache.view(slots=[slot]), self.cfg)
-            tok = int(np.asarray(nxt_dev)[0])
-            st.prefill_s = time.time() - t0
-            self.cache.update_pages(view)
-            if r.max_new_tokens > 0:   # max_new=0: score-only request
+    # ----------------------------------------------------------- admission
+    def _try_place(self, st: _SeqState, expect: tuple | None):
+        """Match the trie, size the tail, and — if the prefill bucket
+        is compatible with ``expect`` — commit: pin the prefix, make
+        room (evict/preempt), splice the block table, CoW the boundary
+        page.  Returns the bucket, "mismatch", or None (cannot place).
+        """
+        prompt = st.full_prompt()
+        plen = len(prompt)
+        bs = self.engine_cfg.block_size
+        need_total = self.cache.blocks_for(plen)
+        if need_total > self.cache.max_blocks_per_seq:
+            raise RuntimeError(
+                f"request {st.request.uid} needs {need_total} blocks > "
+                f"max_blocks_per_seq {self.cache.max_blocks_per_seq}")
+
+        nodes: list[PrefixNode] = []
+        prefix_len = 0
+        if self.prefix is not None:
+            matched, mtokens = self.prefix.match(prompt)
+            # per-node coverage: whole pages, except possibly the last
+            contribs = [len(nd.key) for nd in matched]
+            if matched:
+                contribs[-1] = mtokens - sum(contribs[:-1])
+            # reuse is capped at plen-1: the true last prompt token is
+            # always recomputed so its logits exist to sample from
+            allowed, cum = plen - 1, 0
+            for nd, contrib in zip(matched, contribs):
+                if cum >= allowed:
+                    break
+                nodes.append(nd)
+                cum += contrib
+            prefix_len = min(cum, allowed)
+
+        first_write_col = prefix_len // bs
+        cow = first_write_col < len(nodes)
+        need = need_total - len(nodes) + (1 if cow else 0)
+        s_pad = self._bucket_len(plen - prefix_len)
+        pcap = self._pcap_bucket(len(nodes))
+        bucket = (s_pad, pcap)
+        if expect is not None and bucket != expect:
+            return "mismatch"
+
+        if self.prefix is not None:
+            self.prefix.pin(nodes)     # eviction-proof before make_room
+        if not self._make_room(need, st.seq_no):
+            if self.prefix is not None:
+                self.prefix.unpin(nodes)
+            return None
+        if self.prefix is not None:    # stats count committed admissions
+            self.prefix.stats.queries += 1
+            if nodes:
+                self.prefix.stats.hits += 1
+            self.prefix.stats.tokens_reused += prefix_len
+            self.prefix.stats.tokens_missed += plen - prefix_len
+        slot = self._slots.index(None)
+        self.cache.bind_slot(slot, plen, [nd.page for nd in nodes],
+                             reserved=False)
+        if cow:
+            # the sequence will write into the last matched page (it is
+            # only partially covered by the hit): clone it, then drop
+            # our pin on the original — the clone carries the KV now
+            self.cache.cow_slot_page(slot, first_write_col)
+            self.prefix.stats.cow_copies += 1
+            cow_node = nodes.pop(first_write_col)
+            self.prefix.unpin([cow_node])
+        st.slot, st.status = slot, _RUNNING
+        st.pinned = nodes
+        st.prefix_len = prefix_len
+        self._slots[slot] = st
+        return bucket
+
+    def _prefill_group(self, group: list[_SeqState], s_pad: int,
+                       pcap: int) -> list[Completion]:
+        """One batched prefill over coalesced same-bucket admissions."""
+        finished: list[Completion] = []
+        toks = np.zeros((len(group), s_pad), np.int32)
+        plens = np.zeros((len(group),), np.int32)
+        slots = []
+        for g, st in enumerate(group):
+            tail = st.full_prompt()[st.prefix_len:]
+            toks[g, : len(tail)] = tail
+            plens[g] = st.prefix_len
+            slots.append(st.slot)
+            self.prefill_tokens_computed += len(tail)
+        self.prefill_batches += 1
+        t0 = time.time()
+        nxt_dev, view = self._prefill(
+            self.params, jnp.asarray(toks), self.cache.view(slots=slots),
+            jnp.asarray(plens), self.cfg, pcap)
+        nxt = np.asarray(nxt_dev)
+        dt = time.time() - t0
+        self.cache.update_pages(view)
+        for g, st in enumerate(group):
+            st.prefill_s += dt      # coalesced admissions share the stamp
+            r = st.request
+            if r.max_new_tokens > 0 and len(st.tokens) < r.max_new_tokens:
+                tok = int(nxt[g])
                 st.tokens.append(tok)
                 st.next_token = tok
             if self._should_stop(st):
-                finished.append(self._retire(slot))
+                finished.append(self._retire(st.slot))
+        return finished
+
+    def _admit(self) -> list[Completion]:
+        """FIFO admission with prefix splicing and batched prefill:
+        coalesce up to ``max_batched_prefill`` consecutive queue heads
+        that share a (tail-bucket, prefix-bucket) compile signature
+        into one ``prefill_into_cache`` call."""
+        finished: list[Completion] = []
+        blocked = False
+        while not blocked and self._queue and None in self._slots:
+            group: list[_SeqState] = []
+            bucket: tuple | None = None
+            while (self._queue and None in self._slots
+                   and len(group) < self.engine_cfg.max_batched_prefill):
+                # pop before placing: _try_place may preempt a victim
+                # onto the queue front, so a later popleft could grab
+                # the wrong element
+                st = self._queue.popleft()
+                placed = self._try_place(st, bucket)
+                if placed == "mismatch":
+                    self._queue.appendleft(st)
+                    break                 # flush; next outer pass takes it
+                if placed is None:
+                    self._queue.appendleft(st)
+                    blocked = True        # head-of-line: wait for pages
+                    break
+                bucket = placed
+                group.append(st)
+            if not group:
+                break
+            finished.extend(self._prefill_group(group, *bucket))
         return finished
 
 

@@ -17,9 +17,13 @@ Layout / invariants
 - Logical block ``j`` of a sequence holds tokens ``[j*bs, (j+1)*bs)``;
   ``block_tables[slot, j]`` is its physical page.  Token ``t`` lives at
   page ``block_tables[slot, t // bs]``, offset ``t % bs``.
-- The allocator's free list plus every live sequence's blocks plus the
-  trash page partition ``range(num_blocks)`` at all times; admission
-  *reservations* guarantee mid-decode allocation never fails.
+- Every non-trash page is in exactly one of four states: on the free
+  list (refcount 0), privately owned by a live slot (refcount 1),
+  held by the prefix-cache trie (refcount 1 + one per pinning slot),
+  or the trash page.  ``audit_partition`` asserts this partition.
+- A slot may only *write* a page it owns exclusively; prefix pages
+  pinned from the trie are read-only and the engine copy-on-writes
+  (``cow_slot_page``) before the first write into a shared page.
 
 Device state (``k_pages``/``v_pages``) is functionally updated inside
 jitted prefill/decode steps; the host keeps the allocator, block
@@ -30,7 +34,7 @@ each step.
 from __future__ import annotations
 
 import math
-from typing import NamedTuple
+from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -58,13 +62,14 @@ class PagedView(NamedTuple):
 
 
 class BlockAllocator:
-    """Free-list page allocator with admission reservations.
+    """Free-list page allocator with refcounts and reservations.
 
-    ``reserve(n)`` earmarks capacity at admission time (the scheduler
-    reserves a sequence's worst case, ``ceil((prompt+max_new)/bs)``);
-    ``alloc(n)`` consumes reserved pages as the sequence actually
-    grows.  Invariant: ``len(free) >= reserved`` always, so a reserved
-    allocation cannot fail mid-decode.
+    ``reserve(n)`` earmarks capacity (legacy worst-case admission;
+    the prefix-cache engine admits unreserved and preempts instead);
+    ``alloc(n)`` pops pages at refcount 1.  Sharing — a prefix page
+    pinned by several sequences, or held by the trie — is expressed
+    via ``incref``/``decref``; a page returns to the free list exactly
+    when its refcount drops to zero.
     """
 
     def __init__(self, num_blocks: int):
@@ -72,6 +77,7 @@ class BlockAllocator:
             raise ValueError("need >= 2 blocks (page 0 is reserved trash)")
         self.num_blocks = num_blocks
         self._free: list[int] = list(range(num_blocks - 1, TRASH_PAGE, -1))
+        self._refcount = np.zeros((num_blocks,), np.int32)
         self._reserved = 0
         self.peak_in_use = 0
 
@@ -111,13 +117,31 @@ class BlockAllocator:
         elif n > len(self._free) - self._reserved:
             raise RuntimeError(f"alloc({n}) exceeds unreserved capacity")
         out = [self._free.pop() for _ in range(n)]
+        self._refcount[out] = 1
         self.peak_in_use = max(self.peak_in_use, self.blocks_in_use)
         return out
 
+    # --------------------------------------------------------- refcounts
+    def refcount(self, block: int) -> int:
+        return int(self._refcount[block])
+
+    def incref(self, block: int) -> None:
+        assert block != TRASH_PAGE and self._refcount[block] > 0, block
+        self._refcount[block] += 1
+
+    def decref(self, block: int) -> None:
+        """Drop one reference; the page frees when the count hits 0."""
+        assert block != TRASH_PAGE and self._refcount[block] > 0, block
+        self._refcount[block] -= 1
+        if self._refcount[block] == 0:
+            self._free.append(block)
+
     def free(self, blocks: list[int]) -> None:
+        """Release exclusively-held pages (refcount must be 1)."""
         for b in blocks:
             assert b != TRASH_PAGE and b not in self._free, b
-            self._free.append(b)
+            assert self._refcount[b] == 1, (b, self._refcount[b])
+            self.decref(b)
 
 
 class PagedKVCache:
@@ -139,6 +163,9 @@ class PagedKVCache:
                                     TRASH_PAGE, np.int32)
         self.lengths = np.zeros((num_slots,), np.int32)
         self.slot_blocks: list[list[int]] = [[] for _ in range(num_slots)]
+        # subset of slot_blocks[i] pinned from the prefix trie: read-only
+        # for this slot; a write there must go through cow_slot_page.
+        self.slot_shared: list[set[int]] = [set() for _ in range(num_slots)]
 
     # ------------------------------------------------------------ geometry
     def blocks_for(self, tokens: int) -> int:
@@ -164,43 +191,126 @@ class PagedKVCache:
                 * head_dim * jnp.dtype(dtype).itemsize)
 
     # ------------------------------------------------------------ slot ops
-    def bind_slot(self, slot: int, prompt_tokens: int) -> None:
-        """Allocate pages covering the prompt and install the table row."""
+    def bind_slot(self, slot: int, prompt_tokens: int,
+                  shared: Sequence[int] = (), *,
+                  reserved: bool = True) -> list[int]:
+        """Install the table row for a new sequence: ``shared`` pages
+        (already pinned from the prefix trie, spliced read-only at the
+        front) plus freshly allocated pages covering the rest of the
+        prompt.  Returns the newly allocated (owned) pages."""
         assert not self.slot_blocks[slot], "slot already bound"
-        blocks = self.allocator.alloc(self.blocks_for(prompt_tokens))
+        need = self.blocks_for(prompt_tokens) - len(shared)
+        assert need >= 0, (prompt_tokens, len(shared))
+        owned = self.allocator.alloc(need, reserved=reserved) if need else []
+        blocks = list(shared) + owned
         self.slot_blocks[slot] = blocks
+        self.slot_shared[slot] = set(shared)
         self.block_tables[slot, :] = TRASH_PAGE
         self.block_tables[slot, : len(blocks)] = blocks
         self.lengths[slot] = prompt_tokens
+        return owned
 
-    def ensure_capacity(self, slot: int) -> None:
+    def cow_slot_page(self, slot: int, col: int) -> tuple[int, int]:
+        """Copy-on-write logical block ``col``: allocate a private page,
+        copy the shared page's contents (all layers, K and V), and swap
+        the table entry.  The shared page keeps its trie reference (the
+        engine unpins it); the slot now owns the copy.  Returns
+        ``(old_page, new_page)``."""
+        old = self.slot_blocks[slot][col]
+        assert old in self.slot_shared[slot], (slot, col, old)
+        (new,) = self.allocator.alloc(1, reserved=False)
+        self.k_pages = self.k_pages.at[:, new].set(self.k_pages[:, old])
+        self.v_pages = self.v_pages.at[:, new].set(self.v_pages[:, old])
+        self.slot_blocks[slot][col] = new
+        self.slot_shared[slot].discard(old)
+        self.block_tables[slot, col] = new
+        return old, new
+
+    def ensure_capacity(self, slot: int, *, reserved: bool = True) -> None:
         """Grow the slot by one page iff the next write crosses into an
-        unallocated logical block (lazy, reservation-backed)."""
+        unallocated logical block (lazy)."""
         pos = int(self.lengths[slot])
         owned = len(self.slot_blocks[slot])
         if pos == owned * self.block_size:
             if owned >= self.max_blocks_per_seq:
                 raise RuntimeError(
                     f"slot {slot} exceeded max_blocks_per_seq={owned}")
-            (blk,) = self.allocator.alloc(1)
+            (blk,) = self.allocator.alloc(1, reserved=reserved)
             self.slot_blocks[slot].append(blk)
             self.block_tables[slot, owned] = blk
 
     def release_slot(self, slot: int) -> int:
-        """Retire a sequence: pages go back to the free list."""
+        """Retire a sequence: owned pages go back to the free list;
+        shared (trie-pinned) pages are left to the engine's unpin.
+        Returns the number of owned pages freed."""
+        shared = self.slot_shared[slot]
+        owned = [b for b in self.slot_blocks[slot] if b not in shared]
+        self.allocator.free(owned)
+        self.clear_slot(slot)
+        return len(owned)
+
+    def clear_slot(self, slot: int) -> list[int]:
+        """Detach a slot without freeing anything (the caller has
+        transferred page ownership, e.g. into the prefix trie).
+        Returns the block list the slot held."""
         blocks = self.slot_blocks[slot]
-        self.allocator.free(blocks)
         self.slot_blocks[slot] = []
+        self.slot_shared[slot] = set()
         self.block_tables[slot, :] = TRASH_PAGE
         self.lengths[slot] = 0
-        return len(blocks)
+        return blocks
+
+    # ------------------------------------------------------------ audit
+    def audit_partition(self, trie_pages: set[int],
+                        trie_pins: dict[int, int] | None = None) -> None:
+        """Assert the page partition invariant: free ∪ slot-owned ∪
+        trie ∪ {trash} covers every page exactly once, and refcounts
+        agree (owned pages 1; trie pages 1 + one per pinning slot)."""
+        alloc = self.allocator
+        free = set(alloc._free)
+        owned: set[int] = set()
+        pins: dict[int, int] = {}
+        for slot in range(self.num_slots):
+            shared = self.slot_shared[slot]
+            for b in self.slot_blocks[slot]:
+                if b in shared:
+                    assert b in trie_pages, (slot, b, "shared not in trie")
+                    pins[b] = pins.get(b, 0) + 1
+                else:
+                    assert b not in owned, (slot, b, "owned twice")
+                    owned.add(b)
+        assert TRASH_PAGE not in free | owned | trie_pages
+        assert not free & owned, free & owned
+        assert not free & trie_pages, free & trie_pages
+        assert not owned & trie_pages, owned & trie_pages
+        universe = free | owned | trie_pages | {TRASH_PAGE}
+        assert universe == set(range(alloc.num_blocks)), (
+            set(range(alloc.num_blocks)) - universe)
+        for b in free:
+            assert alloc.refcount(b) == 0, (b, alloc.refcount(b))
+        for b in owned:
+            assert alloc.refcount(b) == 1, (b, alloc.refcount(b))
+        for b in trie_pages:
+            assert alloc.refcount(b) == 1 + pins.get(b, 0), (
+                b, alloc.refcount(b), pins.get(b, 0))
+        if trie_pins is not None:
+            for b, n in pins.items():
+                assert trie_pins.get(b, 0) == n, (b, trie_pins.get(b), n)
 
     # ------------------------------------------------------------ views
-    def view(self, slots: list[int] | None = None) -> PagedView:
-        """Device view of all slots (decode) or a subset (prefill)."""
+    def view(self, slots: list[int] | None = None,
+             cols: int | None = None) -> PagedView:
+        """Device view of all slots (decode) or a subset (prefill).
+
+        ``cols`` trims the block table to its first ``cols`` logical
+        columns — the paged decode kernel's grid is ``(B, cols)``, so
+        slicing off dead columns (no live sequence reaches them) skips
+        their grid steps entirely."""
         bt, ln = self.block_tables, self.lengths
         if slots is not None:
             bt, ln = bt[slots], ln[slots]
+        if cols is not None:
+            bt = bt[:, :cols]
         return PagedView(self.k_pages, self.v_pages,
                          jnp.asarray(bt), jnp.asarray(ln))
 

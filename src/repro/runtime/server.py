@@ -41,17 +41,24 @@ class InferenceServer:
     def __init__(self, cfg: ModelConfig, params=None, rng_seed: int = 0,
                  quant_bits: int | None = None, max_len: int = 512,
                  kv_dtype: str | jnp.dtype = "float32",
-                 num_slots: int = 8, block_size: int = 16):
+                 num_slots: int = 8, block_size: int = 16,
+                 prefix_cache: bool = True):
         """``kv_dtype``: KV-cache storage dtype — "float32"/"bfloat16"
         for full fidelity, "float8_e4m3fn" for the narrow-byte cache
         (dequantized in-kernel by ``decode_gqa``).  ``num_slots`` /
-        ``block_size`` size the paged engine behind :meth:`generate`."""
+        ``block_size`` size the paged engine behind :meth:`generate`.
+        ``prefix_cache`` keeps retired sequences' KV pages in a radix
+        trie so later requests sharing a prompt prefix (system prompt,
+        few-shot header, chat history) skip re-prefilling it; the
+        engine persists across ``generate`` calls, so so does the
+        cache.  Disable for a cold-path baseline."""
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         self.max_len = max_len
         self.kv_dtype = jnp.dtype(kv_dtype)
         self.num_slots = num_slots
         self.block_size = block_size
+        self.prefix_cache = prefix_cache
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
                                    dtype=jnp.float32)
@@ -87,7 +94,8 @@ class InferenceServer:
         ec = EngineConfig(
             num_slots=self.num_slots,
             block_size=self.block_size,
-            max_seq_len=self._engine_max_seq)
+            max_seq_len=self._engine_max_seq,
+            prefix_cache=self.prefix_cache)
         if self.last_engine is None or self.last_engine.engine_cfg != ec:
             self.last_engine = Engine(self.cfg, params=self.params,
                                       engine=ec, kv_dtype=self.kv_dtype)

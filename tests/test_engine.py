@@ -249,9 +249,11 @@ class TestEngine:
             len(self.LENS), srv.max_len, cfg.num_layers, cfg.num_kv_heads,
             cfg.resolved_head_dim, srv.kv_dtype)
         assert 0 < eng.cache.peak_kv_bytes() < contig
-        # everything was released on retirement
-        assert eng.cache.allocator.blocks_in_use == 0
+        # retirement moved every page into the prefix trie (nothing is
+        # owned by a slot any more) and the partition invariant holds
+        assert eng.cache.allocator.blocks_in_use == eng.prefix.num_pages
         assert eng.cache.allocator.reserved == 0
+        eng.check_partition()
 
     def test_f8_kv_pages_match_f8_bucketed(self):
         cfg = tiny_cfg()
@@ -284,12 +286,17 @@ class TestEngine:
             eng.result(0).tokens, ref[0].tokens)
 
     def test_stop_token_retirement_frees_blocks(self):
+        """With the prefix cache off, retirement returns pages to the
+        free list (the trie-retention variant lives in
+        test_prefix_cache.py)."""
         cfg = tiny_cfg()
         eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
-                                              max_seq_len=64))
+                                              max_seq_len=64,
+                                              prefix_cache=False))
         probe = Engine(cfg, params=eng.params,
                        engine=EngineConfig(num_slots=1, block_size=8,
-                                           max_seq_len=64))
+                                           max_seq_len=64,
+                                           prefix_cache=False))
         reqs = mixed_requests(cfg, [16, 24], [20, 20])
         stop = int(probe.generate([reqs[0]])[0].tokens[2])
 
@@ -347,7 +354,8 @@ class TestEngine:
         news = [2, 2, 8, 2, 2, 2]
         reqs = mixed_requests(cfg, lens, news)
         eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
-                                              max_seq_len=32))
+                                              max_seq_len=32,
+                                              prefix_cache=False))
         out = eng.generate(reqs)
         assert [c.uid for c in out] == list(range(6))
         srv = InferenceServer(cfg, params=eng.params, max_len=32)
@@ -383,7 +391,9 @@ class TestEngine:
         srv = InferenceServer(cfg, params=eng.params, max_len=32)
         ref = srv.generate_bucketed(mixed_requests(cfg, [8], [0]))
         assert ref[0].tokens.size == 0
-        assert eng.cache.allocator.blocks_in_use == 0
+        # the scored prompt's page went to the trie, not a slot
+        assert eng.cache.allocator.blocks_in_use == eng.prefix.num_pages
+        eng.check_partition()
 
     def test_submit_validation(self):
         cfg = tiny_cfg()

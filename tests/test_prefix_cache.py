@@ -1,0 +1,429 @@
+"""Prefix cache: radix-tree KV reuse over refcounted pages.
+
+Covers the trie itself (insert/match at page granularity, partial-leaf
+matching, dedup, LRU eviction, pin protection), the allocator's
+refcount partition invariant under eviction and preemption, the
+offset-prefill model path (tail positions, prefix attention, per-token
+scatter), copy-on-write of shared boundary pages, batched prefill
+admission, decode grid trimming, and the engine-level acceptance
+property: prefix-hit output is token-for-token identical to the cold
+path."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import api as mapi
+from repro.runtime.engine import Engine, EngineConfig, Request
+from repro.runtime.paged_cache import TRASH_PAGE, BlockAllocator, PagedKVCache
+from repro.runtime.prefix_cache import PrefixCache
+
+
+def tiny_cfg(**kw):
+    base = dict(num_layers=2, d_model=64, d_ff=128,
+                compute_dtype="float32")
+    base.update(kw)
+    return get_config("qwen3-1.7b", tiny=True).replace(**base)
+
+
+def shared_prefix_requests(cfg, n, sys_len, tail_len, max_new, seed=0,
+                           uid0=0):
+    """n requests sharing a sys_len-token system prompt."""
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+    return [Request(uid0 + i, np.concatenate(
+                [sys_p, rng.integers(0, cfg.vocab_size,
+                                     tail_len).astype(np.int32)]),
+                max_new_tokens=max_new)
+            for i in range(n)]
+
+
+def clone(reqs):
+    return [Request(r.uid, r.prompt, r.max_new_tokens, r.stop_token)
+            for r in reqs]
+
+
+def drain_checked(eng):
+    """Drive the engine to completion, asserting the page-partition
+    invariant after every scheduler tick."""
+    while eng.pending:
+        eng.step()
+        eng.check_partition()
+    done = eng.run()
+    eng.check_partition()
+    return done
+
+
+# ---------------------------------------------------------------- trie --
+
+class TestTrie:
+    BS = 8
+
+    def _trie(self, num_blocks=64):
+        a = BlockAllocator(num_blocks)
+        return a, PrefixCache(a, self.BS)
+
+    def test_insert_match_roundtrip(self):
+        a, p = self._trie()
+        tokens = np.arange(38)              # 4 full pages + partial(6)
+        blocks = a.alloc(5, reserved=False)
+        p.insert(tokens, blocks, set())
+        assert p.num_pages == 5
+        nodes, used = p.match(tokens)
+        assert [n.page for n in nodes] == blocks and used == 38
+        # page-boundary split: 20 tokens = 2 whole edges + 4 tokens of
+        # the third page (partial edge use)
+        nodes, used = p.match(tokens[:20])
+        assert [n.page for n in nodes] == blocks[:3] and used == 20
+        # the stored partial leaf matches behind its full siblings
+        nodes, used = p.match(np.concatenate([tokens[:32],
+                                              tokens[32:35], [999]]))
+        assert [n.page for n in nodes] == blocks and used == 35
+
+    def test_match_stops_at_divergence(self):
+        a, p = self._trie()
+        tokens = np.arange(32)
+        p.insert(tokens, a.alloc(4, reserved=False), set())
+        other = tokens.copy()
+        other[12] = 999                     # diverge inside page 1
+        nodes, used = p.match(other)
+        assert len(nodes) == 2 and used == 12
+        other2 = tokens.copy()
+        other2[0] = 999                     # diverge immediately
+        assert p.match(other2) == ([], 0)
+
+    def test_insert_dedup_frees_duplicates(self):
+        a, p = self._trie()
+        tokens = np.arange(24)
+        first = a.alloc(3, reserved=False)
+        p.insert(tokens, first, set())
+        free_before = a.free_blocks
+        dup = a.alloc(3, reserved=False)
+        p.insert(tokens, dup, set())
+        assert p.num_pages == 3
+        assert a.free_blocks == free_before          # dups went back
+        assert p.stats.dedup_pages == 3
+        assert [n.page for n in p.match(tokens)[0]] == first
+
+    def test_branching_prefixes(self):
+        a, p = self._trie()
+        base = np.arange(8)                           # one shared page
+        left = np.concatenate([base, np.arange(100, 108)])
+        right = np.concatenate([base, np.arange(200, 208)])
+        bl = a.alloc(2, reserved=False)
+        br = a.alloc(2, reserved=False)
+        p.insert(left, bl, set())
+        p.insert(right, br, set())
+        assert p.num_pages == 3                       # shared root page
+        assert a.refcount(bl[0]) == 1
+        assert [n.page for n in p.match(left)[0]] == bl
+        assert [n.page for n in p.match(right)[0]] == [bl[0], br[1]]
+
+    def test_lru_eviction_leaf_first_and_pins(self):
+        a, p = self._trie()
+        chain = np.arange(24)
+        blocks = a.alloc(3, reserved=False)
+        p.insert(chain, blocks, set())                # root->b0->b1->b2
+        pinned, _ = p.match(chain[:8])
+        p.pin(pinned)                                 # protect b0
+        # interior nodes are not evictable: only the leaf b2 goes first
+        assert p.evict(1) == 1
+        assert blocks[2] in a._free
+        # b1 is now a leaf; b0 is pinned so eviction stops after b1
+        assert p.evict(5) == 1
+        assert blocks[1] in a._free
+        assert p.evict(1) == 0                        # b0 pinned
+        p.unpin(pinned)
+        assert p.evict(1) == 1
+        assert a.free_blocks == 63 and p.num_pages == 0
+
+    def test_lru_order(self):
+        a, p = self._trie()
+        t1, t2 = np.arange(8), np.arange(50, 58)
+        b1 = a.alloc(1, reserved=False)
+        b2 = a.alloc(1, reserved=False)
+        p.insert(t1, b1, set())
+        p.insert(t2, b2, set())
+        p.pin(p.match(t1)[0])                         # freshen + pin t1
+        p.unpin(p.match(t1)[0])
+        assert p.evict(1) == 1                        # t2 is older
+        assert b2[0] in a._free and b1[0] not in a._free
+
+
+# ------------------------------------------------------ refcounts/CoW --
+
+class TestRefcounts:
+    def test_incref_decref_free_cycle(self):
+        a = BlockAllocator(8)
+        (b,) = a.alloc(1, reserved=False)
+        assert a.refcount(b) == 1
+        a.incref(b)
+        a.decref(b)
+        assert a.refcount(b) == 1 and b not in a._free
+        a.decref(b)
+        assert a.refcount(b) == 0 and b in a._free
+
+    def test_free_requires_exclusive(self):
+        a = BlockAllocator(8)
+        (b,) = a.alloc(1, reserved=False)
+        a.incref(b)
+        with pytest.raises(AssertionError):
+            a.free([b])                               # shared: rc == 2
+
+    def test_cow_slot_page_copies_content(self):
+        c = PagedKVCache(num_layers=2, num_kv_heads=2, head_dim=4,
+                         num_slots=1, block_size=4, num_blocks=8,
+                         max_blocks_per_seq=4)
+        (shared,) = c.allocator.alloc(1, reserved=False)
+        c.k_pages = c.k_pages.at[:, shared].set(7.0)
+        c.allocator.incref(shared)                    # trie's reference
+        c.bind_slot(0, 6, [shared], reserved=False)   # 2 blocks: 1 shared
+        old, new = c.cow_slot_page(0, 0)
+        assert old == shared and new != shared
+        assert c.block_tables[0, 0] == new
+        assert shared not in c.slot_shared[0]
+        np.testing.assert_array_equal(np.asarray(c.k_pages[:, new]),
+                                      np.asarray(c.k_pages[:, shared]))
+        # the original keeps both its refs (trie + our stale pin)
+        assert c.allocator.refcount(shared) == 2
+
+
+# ---------------------------------------------- offset prefill (model) --
+
+class TestOffsetPrefill:
+    def test_tail_prefill_matches_full_prefill(self):
+        """Prefilling only the tail over pinned prefix pages produces
+        the same last-token logits and the same tail KV as prefilling
+        the whole prompt cold — RoPE offsets and the prefix-attend
+        mask are exactly right."""
+        cfg = tiny_cfg()
+        api = mapi.get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+        rng = np.random.default_rng(5)
+        bs, plen = 4, 19                     # prefix 2 pages, tail 11
+        prompt = rng.integers(0, cfg.vocab_size, plen)
+
+        def fresh_cache():
+            c = PagedKVCache(num_layers=cfg.num_layers,
+                             num_kv_heads=cfg.num_kv_heads,
+                             head_dim=cfg.resolved_head_dim, num_slots=1,
+                             block_size=bs, num_blocks=16,
+                             max_blocks_per_seq=8)
+            c.allocator.reserve(8)
+            return c
+
+        # cold: the whole prompt in one call
+        cold = fresh_cache()
+        cold.bind_slot(0, plen)
+        toks = np.zeros((1, 24), np.int32)
+        toks[0, :plen] = prompt
+        logits_cold, view_cold = api.prefill_into_cache(
+            params, jnp.asarray(toks), cold.view(), cfg)
+
+        # warm: pages 0-1 pre-filled (copied from the cold run), tail
+        # prefilled with an 8-token (= 2-page) prefix offset
+        prefix_len, pblocks = 8, 2
+        warm = fresh_cache()
+        warm.bind_slot(0, plen)
+        src = np.asarray(view_cold.block_tables[0, :pblocks])
+        dst = warm.block_tables[0, :pblocks]
+        warm.k_pages = warm.k_pages.at[:, dst].set(view_cold.k_pages[:, src])
+        warm.v_pages = warm.v_pages.at[:, dst].set(view_cold.v_pages[:, src])
+        tail = np.zeros((1, 16), np.int32)
+        tail[0, : plen - prefix_len] = prompt[prefix_len:]
+        logits_warm, view_warm = api.prefill_into_cache(
+            params, jnp.asarray(tail), warm.view(), cfg,
+            jnp.asarray([prefix_len], jnp.int32), prefix_blocks=pblocks)
+
+        np.testing.assert_allclose(np.asarray(logits_warm[0, -1]),
+                                   np.asarray(logits_cold[0, -1]),
+                                   rtol=2e-5, atol=2e-5)
+        # the tail KV landed at the same logical positions
+        tc = np.asarray(view_cold.block_tables[0, :5])
+        tw = np.asarray(view_warm.block_tables[0, :5])
+        kc = np.asarray(view_cold.k_pages[:, tc]).reshape(
+            cfg.num_layers, 20, cfg.num_kv_heads, -1)[:, :plen]
+        kw = np.asarray(view_warm.k_pages[:, tw]).reshape(
+            cfg.num_layers, 20, cfg.num_kv_heads, -1)[:, :plen]
+        np.testing.assert_allclose(kw, kc, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- engine --
+
+class TestEnginePrefix:
+    def _cold_reference(self, cfg, params, reqs, max_seq=96):
+        eng = Engine(cfg, params=params,
+                     engine=EngineConfig(num_slots=4, block_size=8,
+                                         max_seq_len=max_seq,
+                                         prefix_cache=False))
+        return eng.generate(clone(reqs))
+
+    def test_warm_hits_match_cold_tokens(self):
+        """The acceptance property: a second round sharing the system
+        prompt serves it from the trie — hit rate > 0, fewer prefill
+        tokens computed, and output token-for-token identical to the
+        cold path."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=3, block_size=8,
+                                              max_seq_len=96))
+        r1 = shared_prefix_requests(cfg, 4, 32, 9, 6, seed=1)
+        r2 = shared_prefix_requests(cfg, 4, 32, 9, 6, seed=1)
+        eng.generate(clone(r1))
+        cold_tokens = eng.prefill_tokens_computed
+        out = eng.generate(clone(r2))
+        warm_tokens = eng.prefill_tokens_computed - cold_tokens
+        ps = eng.prefix_stats
+        assert ps.hits > 0 and ps.token_hit_rate > 0
+        assert warm_tokens < cold_tokens          # re-prefill skipped
+        ref = self._cold_reference(cfg, eng.params, r2)
+        assert [c.uid for c in out] == [c.uid for c in ref]
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+        eng.check_partition()
+
+    def test_cow_on_shared_page_aligned_prompt(self):
+        """A fully-cached, page-aligned prompt: reuse is capped at
+        plen-1, so the last matched page is copy-on-written and only
+        the final token recomputes — output unchanged, original page
+        still in the trie."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
+                                              max_seq_len=64))
+        rng = np.random.default_rng(3)
+        prompt = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        first = eng.generate([Request(0, prompt, max_new_tokens=5)])
+        assert eng.prefix_stats.cow_copies == 0
+        second = eng.generate([Request(1, prompt, max_new_tokens=5)])
+        ps = eng.prefix_stats
+        assert ps.cow_copies == 1
+        assert ps.tokens_reused >= 31             # capped full hit
+        np.testing.assert_array_equal(first[0].tokens, second[0].tokens)
+        eng.check_partition()
+
+    def test_cow_on_shared_partial_page(self):
+        """A prompt ending inside a cached *partial* page pins it and
+        clones it before the tail write — decode never mutates the
+        shared copy, and the trie's original survives for a third
+        request."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
+                                              max_seq_len=64))
+        rng = np.random.default_rng(4)
+        prompt = rng.integers(0, cfg.vocab_size, 30).astype(np.int32)
+        outs = [eng.generate([Request(i, prompt, max_new_tokens=1)])[0]
+                for i in range(3)]
+        ps = eng.prefix_stats
+        assert ps.cow_copies >= 1
+        for o in outs[1:]:
+            np.testing.assert_array_equal(outs[0].tokens, o.tokens)
+        eng.check_partition()
+
+    def test_eviction_under_pressure(self):
+        """A pool far smaller than the working set: the trie fills,
+        LRU eviction reclaims unpinned pages, the partition invariant
+        holds every tick, and outputs still match the cold path."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
+                                              max_seq_len=48,
+                                              num_blocks=14))
+        reqs = [shared_prefix_requests(cfg, 2, 16, 9, 5, seed=s,
+                                       uid0=2 * s)[i]
+                for s in range(3) for i in range(2)]
+        for r in reqs:
+            eng.submit(r)
+        out = drain_checked(eng)
+        assert eng.prefix_stats.evicted_pages > 0
+        ref = self._cold_reference(cfg, eng.params, reqs)
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_preempt_and_recompute_token_identity(self):
+        """Aggressive admission over a pool too small for both
+        sequences' full length: the youngest is preempted (pages
+        released), re-queued, re-prefilled from its prompt + generated
+        tokens — and the final stream is token-identical to a roomy
+        cold engine."""
+        cfg = tiny_cfg()
+        rng = np.random.default_rng(6)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                        8).astype(np.int32),
+                        max_new_tokens=22) for i in range(2)]
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=4,
+                                              max_seq_len=32,
+                                              num_blocks=11))
+        for r in reqs:
+            eng.submit(r)
+        out = drain_checked(eng)
+        assert eng.preemptions >= 1
+        ref = self._cold_reference(cfg, eng.params, reqs, max_seq=64)
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_batched_prefill_admission(self):
+        """Same-bucket queue heads coalesce into one prefill dispatch
+        instead of B=1 admission."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=4, block_size=8,
+                                              max_seq_len=48,
+                                              prefix_cache=False))
+        rng = np.random.default_rng(7)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                        9).astype(np.int32),
+                        max_new_tokens=4) for i in range(4)]
+        out = eng.generate(reqs)
+        assert eng.prefill_batches == 1           # 4 admissions, 1 call
+        ref = self._cold_reference(cfg, eng.params, reqs)
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_mixed_bucket_admission_splits_groups(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=4, block_size=8,
+                                              max_seq_len=96,
+                                              prefix_cache=False))
+        rng = np.random.default_rng(8)
+        lens = [9, 9, 40, 40]                     # two prefill buckets
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                        l).astype(np.int32),
+                        max_new_tokens=3) for i, l in enumerate(lens)]
+        out = eng.generate(reqs)
+        assert eng.prefill_batches == 2
+        ref = self._cold_reference(cfg, eng.params, reqs, max_seq=96)
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+    def test_live_cols_trims_decode_grid(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
+                                              max_seq_len=256))
+        rng = np.random.default_rng(9)
+        eng.submit(Request(0, rng.integers(0, cfg.vocab_size,
+                                           9).astype(np.int32),
+                           max_new_tokens=4))
+        eng.step()
+        active = [(i, s) for i, s in enumerate(eng._slots) if s is not None]
+        assert eng.cache.max_blocks_per_seq == 32
+        assert eng._live_cols(active) == 2        # 10ish tokens, not 32
+        eng.run()
+
+    def test_stats_partition_after_interleaved_load(self):
+        """A long interleaved stream (hits, misses, shared prefixes,
+        retirement into a bounded pool) keeps the audit green."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=3, block_size=8,
+                                              max_seq_len=64,
+                                              num_blocks=24))
+        uid = 0
+        for round_ in range(3):
+            reqs = shared_prefix_requests(cfg, 3, 24, 8, 4,
+                                          seed=round_ % 2, uid0=uid)
+            uid += 3
+            for r in reqs:
+                eng.submit(r)
+            drain_checked(eng)
+        ps = eng.prefix_stats
+        assert ps.queries == 9 and ps.hits > 0
+        assert ps.tokens_reused > 0
