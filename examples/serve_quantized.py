@@ -91,7 +91,8 @@ def main():
     print(f"requests: {len(reqs)} (mixed lengths, continuous batching), "
           f"{toks} tokens generated")
     print(f"engine       : {toks/fp_dt:6.1f} tok/s over "
-          f"{fp.total_decode_steps} decode steps")
+          f"{fp.total_decode_steps} decode steps; mean TTFT "
+          f"{np.mean([c.ttft_s for c in fp_out])*1e3:.1f} ms")
     print(f"bucketed     : {toks/legacy_dt:6.1f} tok/s (legacy baseline), "
           f"token agreement {agree_paths:.2%}")
     print(f"peak KV pages: {peak_kv/1e6:.2f} MB vs contiguous "

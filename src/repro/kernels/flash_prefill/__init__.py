@@ -1,0 +1,4 @@
+from repro.kernels.flash_prefill.ops import (  # noqa: F401
+    flash_prefill_paged,
+    flash_prefill_paged_ref,
+)

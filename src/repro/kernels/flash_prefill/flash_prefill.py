@@ -1,0 +1,145 @@
+"""Chunked flash-attention prefill over a *paged* KV cache.
+
+The serving prefill counterpart of ``decode_gqa_paged``: a chunk of S
+query tokens per sequence (a slice of the prompt starting at a per-row
+absolute position ``q_start[b]``) attends over the KV pages named by its
+block table.  The table rides as a scalar-prefetch operand so each
+page's HBM→VMEM DMA is issued straight from the BlockSpec index_map —
+no contiguous ``[B, T]`` cache, no ``[B, S, T]`` mask, and no ``[S, T]``
+score matrix ever materializes.  Causality is positional: query row
+``i`` of sequence ``b`` sits at absolute position ``q_start[b] + i`` and
+attends exactly the cache positions ``<= q_start[b] + i`` (and
+``< kv_lens[b]``, which caps validity at the tokens actually written —
+pages past a sequence's fill point at the trash page and are masked
+out).  One compiled kernel therefore serves every mix of cold prefills,
+prefix-cache tail prefills, and mid-prompt chunks: the offset is data,
+not a compile-time shape.
+
+KV pages may be stored narrow (float8_e4m3fn, bf16): the cast to f32
+happens inside the kernel, after the DMA, so the bytes that cross HBM
+are the narrow ones — the same in-kernel dequant guarantee the decode
+kernel makes.
+
+Grid: (B, max_blk) — batch parallel, KV pages "arbitrary" with the
+classic online-softmax (m, l, acc) VMEM carries sized by the query
+chunk.  A fully-masked row (zero valid positions: an inactive slot in a
+full-width serving dispatch) never raises its running max off the
+-1e30 init and emits zeros, mirroring ``decode_gqa``.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._compat import CompilerParams
+
+
+def _kernel(start_ref, len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *, block_s: int, chunk: int,
+            out_dtype):
+    del bt_ref   # consumed by the index_map; the body only needs positions
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)              # [S, n_kv, g, hd]
+    k = k_ref[0].astype(jnp.float32)              # [bs, n_kv, hd] (dequant!)
+    v = v_ref[0].astype(jnp.float32)
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    logit = jnp.einsum("sngh,tnh->ngst", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    qpos = start_ref[b] + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, chunk, 1), 2)
+    kvpos = j * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, 1, block_s), 3)
+    valid = (kvpos <= qpos) & (kvpos < len_ref[b])
+    logit = jnp.where(valid, logit, -1e30)
+
+    m_prev = m_ref[...]                            # [n_kv, g, S]
+    m_new = jnp.maximum(m_prev, jnp.max(logit, axis=-1))
+    p = jnp.exp(logit - m_new[..., None])          # [n_kv, g, S, bs]
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "ngst,tnh->ngsh", p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        # Rows with zero valid positions (inactive slots in a
+        # full-width dispatch) never raised the running max off its
+        # -1e30 init; emit zeros for them, matching decode_gqa.
+        seen = m_ref[...] > -5e29                      # [n_kv, g, S]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out = jnp.where(seen[..., None], out, 0.0)     # [n_kv, g, S, hd]
+        o_ref[0] = jnp.transpose(out, (2, 0, 1, 3)).astype(out_dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))
+def flash_prefill_paged_kernel(
+    q: jax.Array,             # [B, S, n_kv, g, hd] — roped query chunk
+    k_pages: jax.Array,       # [N_blocks, bs, n_kv, hd] (bf16 / f8 / ...)
+    v_pages: jax.Array,       # [N_blocks, bs, n_kv, hd]
+    block_tables: jax.Array,  # [B, max_blk] int32 — page id per logical block
+    q_start: jax.Array,       # [B] int32 — absolute position of query row 0
+    kv_lens: jax.Array,       # [B] int32 — cache positions actually written
+    *,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Chunked flash prefill over a paged KV cache.
+
+    Logical block ``j`` of sequence ``i`` lives in physical page
+    ``block_tables[i, j]`` (positions ``[j*bs, (j+1)*bs)``); page ids
+    past a sequence's fill must still be *valid* indices (the trash
+    page) — their contribution is masked by ``kv_lens``.  Returns
+    [B, S, n_kv, g, hd].
+    """
+    b, s, n_kv, g, hd = q.shape
+    block_s = k_pages.shape[1]
+    max_blk = block_tables.shape[1]
+    grid = (b, max_blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,   # q_start, kv_lens, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, s, n_kv, g, hd),
+                         lambda i, j, S, L, T: (i, 0, 0, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, hd),
+                         lambda i, j, S, L, T: (T[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, hd),
+                         lambda i, j, S, L, T: (T[i, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, s, n_kv, g, hd),
+                               lambda i, j, S, L, T: (i, 0, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, g, s), jnp.float32),       # running max
+            pltpu.VMEM((n_kv, g, s), jnp.float32),       # running denom
+            pltpu.VMEM((n_kv, g, s, hd), jnp.float32),   # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel, block_s=block_s, chunk=s,
+                          out_dtype=out_dtype),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, s, n_kv, g, hd), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(q_start.astype(jnp.int32), kv_lens.astype(jnp.int32),
+      block_tables.astype(jnp.int32), q, k_pages, v_pages)

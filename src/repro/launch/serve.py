@@ -33,6 +33,10 @@ def main():
                     help="concurrent decode slots")
     ap.add_argument("--block-size", type=int, default=16,
                     help="tokens per KV page")
+    ap.add_argument("--prefill-chunk", type=int, default=256,
+                    help="max prompt tokens one scheduler tick may "
+                         "prefill per sequence (chunked flash prefill); "
+                         "long prompts interleave with running decodes")
     ap.add_argument("--kv-dtype", default="float32",
                     help='e.g. "float8_e4m3fn" for the narrow-byte cache')
     ap.add_argument("--bucketed", action="store_true",
@@ -77,7 +81,8 @@ def main():
                                                 args.shared_prefix
                                                 + args.prompt_len
                                                 + args.new_tokens),
-                                prefix_cache=not args.no_prefix_cache))
+                                prefix_cache=not args.no_prefix_cache,
+                                prefill_chunk=args.prefill_chunk))
         t0 = time.time()
         outs = eng.generate(reqs)
         dt = time.time() - t0
@@ -89,6 +94,13 @@ def main():
     tokens = sum(len(c.tokens) for c in outs)
     print(f"served {len(outs)} requests, {tokens} tokens in {dt:.2f}s "
           f"({tokens/dt:.1f} tok/s) — {label}")
+    if not args.bucketed:
+        import statistics as st
+        print(f"ttft: mean {st.mean(c.ttft_s for c in outs)*1e3:.1f} ms, "
+              f"max {max(c.ttft_s for c in outs)*1e3:.1f} ms; queue wait "
+              f"mean {st.mean(c.queue_wait_s for c in outs)*1e3:.1f} ms "
+              f"({eng.prefill_batches} chunked prefill dispatches, "
+              f"{eng.admission_reorders} prefix-aware reorders)")
     if not args.bucketed and eng.prefix_stats is not None:
         ps = eng.prefix_stats
         print(f"prefix cache: {ps.hits}/{ps.queries} hits, "

@@ -33,9 +33,11 @@ class ModelAPI:
     # Paged-serving entry points (None for families without them).
     # These take a repro.runtime.paged_cache.PagedView instead of
     # owning cache allocation — the Engine's scheduler does.
-    # prefill_into_cache additionally accepts (prefix_lens,
-    # prefix_blocks=K) to prefill only the uncached tail of a prompt
-    # over prefix pages pinned from the radix prefix cache.
+    # prefill_into_cache runs ONE chunk of each row's prompt (cold
+    # prefill, prefix-cache tail, and mid-prompt chunk are the same
+    # call): ``start_pos`` [B] is the absolute position of the chunk's
+    # first token, and attention reads the cached/already-written
+    # positions straight from the pages via the chunked flash kernel.
     prefill_into_cache: Callable | None = None
     decode_step_paged: Callable | None = None
 

@@ -418,6 +418,44 @@ def mha_decode_paged(
     return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
 
 
+def mha_prefill_paged(
+    p: Params,
+    x: jax.Array,                      # [B, S, D] — one prompt chunk
+    cfg: ModelConfig,
+    positions: jax.Array,              # [B, S] absolute positions
+    k_pages: jax.Array,                # [N_blocks, bs, n_kv, hd]
+    v_pages: jax.Array,
+    block_tables: jax.Array,           # [B, max_blk] int32
+    q_start: jax.Array,                # [B] absolute position of row 0
+    kv_lens: jax.Array,                # [B] cache positions written
+    use_rope: bool = True,
+) -> jax.Array:
+    """Chunked-prefill GQA straight from the paged KV cache: the chunk's
+    queries (roped at their absolute positions) attend every written
+    cache position ``<= `` their own through the ``flash_prefill_paged``
+    kernel — block-table scalar prefetch, online softmax over pages,
+    in-kernel dequant of narrow KV dtypes.  The caller scatters the
+    chunk's own K/V into the pages *before* this runs, so within-chunk
+    causality falls out of the same positional mask that covers the
+    cached prefix; no ``[B, S, T]`` mask or score matrix exists at any
+    point."""
+    from repro.kernels.flash_prefill import flash_prefill_paged
+
+    dt = x.dtype
+    q = ll.dense_general(x, p["wq"], "bsd,dnh->bsnh")
+    if cfg.qk_norm:
+        q = apply_head_rms(p["q_norm"], q)
+    if use_rope:
+        q = rope(q, positions, cfg.rope_theta)
+    b, s, h, hd = q.shape
+    groups = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, s, cfg.num_kv_heads, groups, hd)
+    out = flash_prefill_paged(qg, k_pages, v_pages, block_tables,
+                              q_start, kv_lens)
+    out = out.reshape(b, s, h, hd).astype(dt)
+    return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
+
+
 def self_kv(p: Params, x: jax.Array, cfg: ModelConfig,
             positions: jax.Array, use_rope: bool = True):
     """Project K,V for cache writes (decode path)."""

@@ -66,25 +66,14 @@ def abstract_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat1
 
 # ------------------------------------------------------------- forward --
 
-def _block(p, x, cfg: ModelConfig, positions, mask, kv=None,
-           prefix_kv=None):
+def _block(p, x, cfg: ModelConfig, positions, mask, kv=None):
     """One transformer block; returns (y, aux_loss, new_kv).
 
-    ``kv`` overrides attention's K/V wholesale (decode-with-cache);
-    ``prefix_kv=(kp, vp)`` prepends cached prefix K/V (already normed,
-    roped, at absolute positions) to this call's own — the
-    prefix-cache tail-prefill path."""
+    ``kv`` merges this step's K,V into the cache view handed to
+    attention (decode-with-cache); None lets mha derive K,V itself."""
     h = L.apply_norm(p["ln1"], x, cfg)
     new_kv = L.self_kv(p["attn"], h, cfg, positions)
-    if prefix_kv is not None:
-        kp, vp = prefix_kv
-        attn_kv = (jnp.concatenate([kp.astype(x.dtype), new_kv[0]], axis=1),
-                   jnp.concatenate([vp.astype(x.dtype), new_kv[1]], axis=1))
-    else:
-        # kv merges this step's K,V into the cache view handed to
-        # attention; None lets mha derive K,V itself
-        attn_kv = kv
-    attn = L.mha(p["attn"], h, cfg, positions, mask, kv=attn_kv)
+    attn = L.mha(p["attn"], h, cfg, positions, mask, kv=kv)
     x = x + attn
     h = L.apply_norm(p["ln2"], x, cfg)
     if cfg.is_moe:
@@ -229,121 +218,101 @@ def _scatter_token_kv(pages, new, blk_idx, off):
 
 def prefill_into_cache(
     params,
-    tokens: jax.Array,                 # [B, S_pad] — padded to a block multiple
-    view,                              # PagedView for the admitted rows
+    tokens: jax.Array,                 # [B, S] — one prompt chunk per row
+    view,                              # PagedView for the dispatched rows
     cfg: ModelConfig,
-    prefix_lens: jax.Array | None = None,   # [B] int32 — cached tokens per row
-    *,
-    prefix_blocks: int = 0,            # static: table columns holding prefix
+    start_pos: jax.Array | None = None,   # [B] int32 — abs pos of tokens[:,0]
 ):
-    """Run the (uncached part of the) prompt and scatter its KV into
-    the paged cache.
+    """Run one chunk of each row's prompt and scatter its KV into the
+    paged cache — the ONE prefill path (cold, prefix-cache tail, and
+    mid-prompt chunk are all the same call; only ``start_pos`` differs).
 
-    ``view.lengths`` carries the *true total* prompt lengths; positions
-    at or past a sequence's length are pad tokens whose KV lands either
-    in the tail of the last real page (masked by length until real
-    decode tokens overwrite it) or in the trash page.  Returns
-    (last_logits [B, 1, V] taken at each sequence's true last token,
+    ``tokens[b]`` holds the prompt slice covering absolute positions
+    ``[start_pos[b], start_pos[b] + S)`` (``start_pos=None`` means
+    zeros: a cold whole-prompt call).  ``view.lengths`` carries the
+    *true total* prompt lengths, so the per-row valid token count
+    within this chunk is ``clip(lengths - start_pos, 0, S)``; positions
+    past it are padding whose KV is redirected to the trash page.  A
+    row with nothing to do (``start_pos >= lengths``, e.g. a decoding
+    or empty slot riding in a full-width serving dispatch) writes
+    nothing and returns zero attention.
+
+    The caller must size the block table to cover ``view.lengths``
+    (the Engine's admission raises when a prompt exceeds
+    ``max_blocks_per_seq``): the trash-page redirect below exists for
+    *padding* overflow only — a valid token past the table would be
+    silently dropped, not an error, since the bound is dynamic
+    (``start_pos``) and cannot be asserted under jit.
+
+    Per layer: the chunk's K/V (roped at absolute positions) is
+    scattered per-token at ``page[pos // bs], pos % bs`` *first*, then
+    attention reads every written position ``<=`` each query's own
+    straight from the pages through the ``flash_prefill_paged`` kernel
+    (block-table scalar prefetch, online softmax over pages, in-kernel
+    dequant of narrow KV dtypes).  Within-chunk causality and
+    attention over the cached prefix fall out of the same positional
+    mask — no ``[B, S, T]`` mask or ``[S, T]`` score matrix is ever
+    materialized, and cached prefix pages are never gathered into a
+    contiguous buffer.  Writes never touch a shared prefix page: the
+    scheduler copy-on-writes the boundary page before admission.
+
+    Returns (last_logits [B, 1, V] taken at each row's true last token
+    — meaningful only for rows whose final chunk this is — and the
     updated view).
-
-    Prefix-cache path (``prefix_blocks > 0``): ``tokens`` holds only
-    the uncached *tail*; the first ``prefix_blocks`` block-table
-    columns point at pages already carrying the prefix KV (written by
-    an earlier sequence, pinned by the scheduler).  ``prefix_lens[b]``
-    is the per-row count of cached tokens — dynamic, so one compile
-    serves every hit length under the same (S_pad, prefix_blocks)
-    bucket.  Tail positions are offset by ``prefix_lens`` (RoPE stays
-    absolute), each layer's attention runs over the gathered prefix
-    pages concatenated with the tail's own K/V, and the tail KV is
-    scattered per-token at ``page[pos // bs], pos % bs`` — writes
-    never touch a shared prefix page (the scheduler copy-on-writes the
-    boundary page beforehand), and positions past the table redirect
-    to the trash page.
     """
     x = L.embed_tokens(params["embed"], tokens, cfg)
     b, s, _ = x.shape
     bs = view.block_size
     max_blk = view.block_tables.shape[1]
+    start = (jnp.zeros((b,), jnp.int32) if start_pos is None
+             else start_pos.astype(jnp.int32))                # [B]
+    valid = jnp.clip(view.lengths - start, 0, s)              # [B]
+    # cache positions populated once this chunk's scatter lands; rows
+    # with an empty chunk mask everything out (zero attention, above)
+    kv_lens = jnp.where(valid > 0, start + valid, 0)          # [B]
+    positions = start[:, None] + jnp.arange(s)[None, :]       # [B, S]
 
-    if prefix_blocks == 0:
-        # cold path: whole-page scatter, positions from zero
-        assert s % bs == 0, (s, bs)
-        nblk = s // bs
-        assert nblk <= max_blk, (nblk, view.block_tables.shape)
-        positions = jnp.broadcast_to(jnp.arange(s), (b, s))
-        mask = ("causal", None)
-
-        def body(carry, blk_params):
-            x, aux = carry
-            y, a, (k, v) = _block(blk_params, x, cfg, positions, mask)
-            return (L.constrain_act(y), aux + a), (k, v)
-
-        (x, _aux), (ks, vs) = scan_blocks(
-            body, (x, jnp.zeros((), jnp.float32)), params["blocks"], cfg)
-        x = L.apply_norm(params["ln_f"], x, cfg)
-        idx = jnp.clip(view.lengths - 1, 0, s - 1)
-        x_last = jnp.take_along_axis(
-            x, idx[:, None, None].astype(jnp.int32), axis=1)  # [B, 1, D]
-        logits = L.logits_fn(params, x_last, cfg)
-
-        # [L, B, S, n_kv, hd] -> [L, B, nblk, bs, n_kv, hd] page chunks
-        l, _, _, kvh, hd = ks.shape
-        kc = ks.reshape(l, b, nblk, bs, kvh, hd).astype(view.k_pages.dtype)
-        vc = vs.reshape(l, b, nblk, bs, kvh, hd).astype(view.v_pages.dtype)
-        tbl = view.block_tables[:, :nblk]                     # [B, nblk]
-        k_pages = view.k_pages.at[:, tbl].set(kc)
-        v_pages = view.v_pages.at[:, tbl].set(vc)
-        return logits, view._replace(k_pages=k_pages, v_pages=v_pages)
-
-    # ---------------------------------------------- prefix-cache path
-    assert prefix_lens is not None
-    assert prefix_blocks <= max_blk, (prefix_blocks, max_blk)
-    pl = prefix_lens.astype(jnp.int32)                        # [B]
-    pcap = prefix_blocks * bs
-    positions = pl[:, None] + jnp.arange(s)[None, :]          # [B, S]
-    # tail query i attends: cached prefix positions < prefix_lens[b],
-    # then its own causal window within the tail
-    prefix_ok = jnp.arange(pcap)[None, :] < pl[:, None]       # [B, pcap]
-    causal = jnp.arange(s)[:, None] >= jnp.arange(s)[None, :]  # [S, S]
-    mask = jnp.concatenate(
-        [jnp.broadcast_to(prefix_ok[:, None, :], (b, s, pcap)),
-         jnp.broadcast_to(causal[None], (b, s, s))], axis=-1)  # [B,S,pcap+S]
-    tbl_p = view.block_tables[:, :prefix_blocks]              # [B, pb]
+    # per-token scatter targets: chunk token i of row b lands at page
+    # table[b, pos // bs], offset pos % bs; padding and positions past
+    # the table go to the trash page.
+    tok_ok = ((jnp.arange(s)[None, :] < valid[:, None])
+              & (positions // bs < max_blk))                  # [B, S]
+    col = jnp.where(tok_ok, positions // bs, 0)
+    page = jnp.where(tok_ok,
+                     jnp.take_along_axis(view.block_tables, col, axis=1),
+                     0)                                       # trash page
+    off = jnp.where(tok_ok, positions % bs, 0)
 
     def body(carry, layer_in):
         x, aux = carry
         blk_params, k_pages_l, v_pages_l = layer_in
-        # gather this layer's cached prefix pages through the table
-        kp = k_pages_l[tbl_p].reshape(b, pcap, *k_pages_l.shape[2:])
-        vp = v_pages_l[tbl_p].reshape(b, pcap, *v_pages_l.shape[2:])
-        y, a, (k_new, v_new) = _block(blk_params, x, cfg, positions, mask,
-                                      prefix_kv=(kp, vp))
-        return (L.constrain_act(y), aux + a), (k_new, v_new)
+        h = L.apply_norm(blk_params["ln1"], x, cfg)
+        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions)
+        k_pages_l = k_pages_l.at[page, off].set(
+            k_new.astype(k_pages_l.dtype))
+        v_pages_l = v_pages_l.at[page, off].set(
+            v_new.astype(v_pages_l.dtype))
+        attn = L.mha_prefill_paged(blk_params["attn"], h, cfg, positions,
+                                   k_pages_l, v_pages_l,
+                                   view.block_tables, start, kv_lens)
+        x = x + attn
+        h = L.apply_norm(blk_params["ln2"], x, cfg)
+        if cfg.is_moe:
+            y, a = M.apply_moe(blk_params["moe"], h, cfg)
+        else:
+            y, a = L.apply_mlp(blk_params["mlp"], h, cfg), jnp.zeros(
+                (), jnp.float32)
+        return (L.constrain_act(x + y), aux + a), (k_pages_l, v_pages_l)
 
     (x, _aux), (ks, vs) = scan_blocks(
         body, (x, jnp.zeros((), jnp.float32)),
         (params["blocks"], view.k_pages, view.v_pages), cfg)
     x = L.apply_norm(params["ln_f"], x, cfg)
-    idx = jnp.clip(view.lengths - 1 - pl, 0, s - 1)
+    idx = jnp.clip(view.lengths - 1 - start, 0, s - 1)
     x_last = jnp.take_along_axis(
         x, idx[:, None, None].astype(jnp.int32), axis=1)      # [B, 1, D]
     logits = L.logits_fn(params, x_last, cfg)
-
-    # per-token scatter: tail token i of row b lands at global position
-    # prefix_lens[b] + i -> page table[b, pos // bs], offset pos % bs;
-    # positions past the table (bucket padding overflow) go to trash.
-    pos_glob = pl[:, None] + jnp.arange(s)[None, :]           # [B, S]
-    col = pos_glob // bs
-    in_range = col < max_blk
-    page = jnp.take_along_axis(
-        view.block_tables, jnp.where(in_range, col, 0), axis=1)
-    page = jnp.where(in_range, page, 0)                       # trash page
-    off = jnp.where(in_range, pos_glob % bs, 0)
-    k_pages = view.k_pages.at[:, page, off].set(
-        ks.astype(view.k_pages.dtype))
-    v_pages = view.v_pages.at[:, page, off].set(
-        vs.astype(view.v_pages.dtype))
-    return logits, view._replace(k_pages=k_pages, v_pages=v_pages)
+    return logits, view._replace(k_pages=ks, v_pages=vs)
 
 
 def decode_step_paged(params, view, tokens: jax.Array, active: jax.Array,

@@ -1,5 +1,5 @@
 """Serving engine: continuous batching over a paged, prefix-cached KV
-cache.
+cache, with chunked flash prefill.
 
 The old ``InferenceServer.generate`` was a synchronous, length-bucketed
 batch call over a contiguous ``[B, max_len, n_kv, hd]`` cache: every
@@ -9,8 +9,9 @@ mid-decode.  The :class:`Engine` replaces that with
 
 - ``submit(request) -> handle``: enqueue; nothing runs yet.
 - ``step() -> [Completion]``: one scheduler tick — admit waiting
-  prefills into free decode slots, run ONE batched decode step across
-  all active slots, retire finished sequences.
+  requests into free decode slots, advance every admitted-but-not-yet-
+  prefilled sequence by ONE prompt chunk, run ONE batched decode step
+  across all decoding slots, retire finished sequences.
 - ``stream(handle)``: iterator of tokens, driving ``step`` on demand.
 - ``run()``: drain everything (the batch-call convenience).
 
@@ -21,22 +22,37 @@ so paging never materializes a contiguous cache, dead pages cost no
 grid steps, and narrow KV dtypes (``float8_e4m3fn``) still dequantize
 in-kernel after the HBM→VMEM DMA.
 
+Chunked flash prefill (the prompt-side twin of the same discipline):
+prompts run through ``prefill_into_cache`` in fixed-size chunks of at
+most ``prefill_chunk`` tokens, each chunk scattering its KV into the
+pages and attending everything written so far through the
+``flash_prefill_paged`` kernel — per-row absolute start offsets, online
+softmax over pages, no ``[B, S, T]`` mask or score matrix anywhere.
+Because the start offset is *data* (a per-row int), one full-width
+dispatch per tick serves every prefilling slot at whatever progress it
+has: there are no prompt-length admission buckets, a long prompt no
+longer monopolizes a tick, and time-to-first-token for everyone else is
+bounded by the chunk size instead of the longest queued prompt.
+
 Prefix cache (the byte-not-moved tier): retirement *inserts* finished
 sequences' pages into a radix trie
 (:class:`~repro.runtime.prefix_cache.PrefixCache`) keyed by token
 content instead of freeing them.  Admission walks the trie, pins the
 longest cached prefix (refcount++), splices those page ids into the
-new sequence's block table, and prefills only the uncached tail (RoPE
-positions offset by the hit length; the boundary page is copied before
-the first write — shared pages are never mutated).  Re-prefilling a
-shared system prompt thus costs zero FLOPs and zero HBM traffic — the
-access is never issued, which the PuM literature identifies as the only
-1000x-class win.
+new sequence's block table, and prefills only the uncached tail (the
+chunk's start offset begins at the hit length; the boundary page is
+copied before the first write — shared pages are never mutated).
+Re-prefilling a shared system prompt thus costs zero FLOPs and zero
+HBM traffic — the access is never issued, which the PuM literature
+identifies as the only 1000x-class win.
 
 Scheduling policy (FIFO with reservation-or-preempt):
 - admission needs a free slot and pages for the *prompt tail only* —
-  no worst-case reservation; up to ``max_batched_prefill`` same-bucket
-  queue heads coalesce into one batched prefill call per tick;
+  no worst-case reservation; up to ``max_batched_prefill`` queue heads
+  admit per tick, all sharing the tick's single chunk dispatch;
+- when the queue head cannot get its pages, the scheduler scans the
+  next K=4 waiting requests and admits prefix-cache hits first (their
+  spliced pages shrink the footprint), counting ``admission_reorders``;
 - when the free list runs dry (admission or mid-decode growth), the
   scheduler first LRU-evicts unpinned trie pages, then preempts the
   youngest running sequence (pages released, sequence re-queued to be
@@ -80,6 +96,8 @@ class Completion:
     prefill_s: float              # this request's own prefill wall time
     decode_s: float               # wall time of the steps it was active in
     decode_steps: int = 0         # batched decode steps it participated in
+    ttft_s: float = 0.0           # submit -> first token available
+    queue_wait_s: float = 0.0     # submit -> first admission into a slot
 
 
 @dataclasses.dataclass
@@ -89,7 +107,8 @@ class EngineConfig:
     max_seq_len: int = 512        # per-sequence cap (prompt + generated)
     num_blocks: int | None = None  # page-pool size; None -> full occupancy
     prefix_cache: bool = True     # radix-tree KV reuse across requests
-    max_batched_prefill: int = 4  # same-bucket admissions per prefill call
+    max_batched_prefill: int = 4  # admissions per scheduler tick
+    prefill_chunk: int = 256      # max prompt tokens advanced per row/tick
 
 
 _QUEUED, _RUNNING, _FINISHED = "queued", "running", "finished"
@@ -110,12 +129,11 @@ def _donate(*argnums):
 
 @functools.lru_cache(maxsize=None)
 def _jit_prefill(prefill_fn):
-    def fn(params, tokens, view, prefix_lens, cfg, prefix_blocks):
-        logits, view = prefill_fn(params, tokens, view, cfg, prefix_lens,
-                                  prefix_blocks=prefix_blocks)
+    def fn(params, tokens, view, start, cfg):
+        logits, view = prefill_fn(params, tokens, view, cfg, start)
         nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
         return nxt, view
-    return jax.jit(fn, static_argnums=(4, 5), donate_argnums=_donate(2))
+    return jax.jit(fn, static_argnums=(4,), donate_argnums=_donate(2))
 
 
 @functools.lru_cache(maxsize=None)
@@ -136,11 +154,16 @@ class _SeqState:
     tokens: list[int] = dataclasses.field(default_factory=list)
     next_token: int = 0
     prefix_len: int = 0           # prompt tokens served from the trie
+    prefill_pos: int = 0          # tail tokens already chunk-prefilled
+    prefill_done: bool = False    # all prompt chunks in the cache
     pinned: list[PrefixNode] = dataclasses.field(default_factory=list)
     preemptions: int = 0
     prefill_s: float = 0.0
     decode_s: float = 0.0
     decode_steps: int = 0
+    submit_t: float = 0.0         # wall stamp at submit()
+    admit_t: float | None = None  # first admission into a slot
+    first_token_t: float | None = None
 
     def full_prompt(self) -> np.ndarray:
         """Prompt plus tokens generated before a preemption: greedy
@@ -152,9 +175,14 @@ class _SeqState:
                                np.asarray(self.tokens, np.int32)])
 
     def completion(self) -> Completion:
+        ttft = (self.first_token_t - self.submit_t
+                if self.first_token_t is not None else 0.0)
+        wait = (self.admit_t - self.submit_t
+                if self.admit_t is not None else 0.0)
         return Completion(self.request.uid,
                           np.asarray(self.tokens, np.int32),
-                          self.prefill_s, self.decode_s, self.decode_steps)
+                          self.prefill_s, self.decode_s, self.decode_steps,
+                          ttft_s=ttft, queue_wait_s=wait)
 
 
 class Engine:
@@ -178,6 +206,9 @@ class Engine:
                 f"got family={cfg.family!r} frontend={cfg.frontend!r}")
         self.engine_cfg = engine or EngineConfig()
         ec = self.engine_cfg
+        if ec.prefill_chunk < 1:
+            raise ValueError(f"prefill_chunk must be >= 1, got "
+                             f"{ec.prefill_chunk}")
         self.kv_dtype = jnp.dtype(kv_dtype)
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
@@ -208,8 +239,9 @@ class Engine:
         self._seq_counter = 0
         self.total_decode_steps = 0
         self.prefill_tokens_computed = 0
-        self.prefill_batches = 0      # batched prefill dispatches issued
+        self.prefill_batches = 0      # chunked prefill dispatches issued
         self.preemptions = 0
+        self.admission_reorders = 0   # prefix-hits admitted past a blocked head
 
         self._prefill = _jit_prefill(self.api.prefill_into_cache)
         self._decode = _jit_decode(self.api.decode_step_paged)
@@ -225,7 +257,8 @@ class Engine:
                 f"request {request.uid}: prompt {plen} + max_new "
                 f"{request.max_new_tokens} exceeds max_seq_len "
                 f"{self.engine_cfg.max_seq_len}")
-        st = _SeqState(request, seq_no=self._seq_counter)
+        st = _SeqState(request, seq_no=self._seq_counter,
+                       submit_t=time.time())
         self._seq_counter += 1
         self._states[request.uid] = st
         self._queue.append(st)
@@ -236,15 +269,18 @@ class Engine:
         return bool(self._queue) or any(s is not None for s in self._slots)
 
     def step(self) -> list[Completion]:
-        """One scheduler tick: admit, decode once, retire.  Returns the
-        completions that finished during this tick."""
-        finished = self._admit()
-        active = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        """One scheduler tick: admit, advance prefills by one chunk,
+        decode once, retire.  Returns the completions that finished
+        during this tick."""
+        self._admit()
+        if self._queue and all(s is None for s in self._slots):
+            raise RuntimeError(
+                "no admissible request: head of queue needs more KV "
+                "blocks than the pool can ever free")
+        finished = self._prefill_tick()
+        active = [(i, s) for i, s in enumerate(self._slots)
+                  if s is not None and s.prefill_done]
         if not active:
-            if self._queue:
-                raise RuntimeError(
-                    "no admissible request: head of queue needs more KV "
-                    "blocks than the pool can ever free")
             return finished
 
         # grow any sequence whose next write crosses a block boundary —
@@ -253,7 +289,8 @@ class Engine:
         for i, st in sorted(active, key=lambda t: t[1].seq_no):
             if self._slots[i] is st:     # not preempted earlier this tick
                 self._grow(i)
-        active = [(i, s) for i, s in enumerate(self._slots) if s is not None]
+        active = [(i, s) for i, s in enumerate(self._slots)
+                  if s is not None and s.prefill_done]
         if not active:
             return finished
 
@@ -272,6 +309,8 @@ class Engine:
         dt = time.time() - t0
         self.cache.update_pages(view)
         # the device-computed lengths are the single source of truth
+        # for *decoding* slots; prefilling slots keep their host value
+        # (their lengths ride through the decode step unchanged)
         self.cache.lengths[:] = np.asarray(view.lengths)
         self.total_decode_steps += 1
         for i, st in active:
@@ -380,13 +419,16 @@ class Engine:
             self.prefix.unpin(st.pinned)
         st.pinned = []
         st.prefix_len = 0
+        st.prefill_pos = 0
+        st.prefill_done = False
         st.slot = -1
         st.status = _QUEUED
         st.preemptions += 1
         self.preemptions += 1
         self._queue.appendleft(st)
 
-    def _make_room(self, need: int, seq_no: int) -> bool:
+    def _make_room(self, need: int, seq_no: int, *,
+                   allow_preempt: bool = True) -> bool:
         """Eviction ladder: free list -> LRU-evict unpinned trie pages
         -> preempt the youngest running sequence submitted after
         ``seq_no``.  Returns False if ``need`` pages cannot be freed."""
@@ -395,6 +437,8 @@ class Engine:
             if (self.prefix is not None
                     and self.prefix.evict(need - alloc.free_blocks)):
                 continue
+            if not allow_preempt:
+                return False
             victim = None
             for st in self._slots:
                 if (st is not None and st.seq_no > seq_no
@@ -426,6 +470,10 @@ class Engine:
         page = self.cache.block_tables[slot, pos // bs]
         assert page not in self.cache.slot_shared[slot], (slot, pos, page)
 
+    @staticmethod
+    def _pow2(n: int) -> int:
+        return 1 << max(0, math.ceil(math.log2(max(n, 1))))
+
     def _live_cols(self, active) -> int:
         """Block-table columns the decode step actually needs: enough
         to cover every live sequence's cache plus this tick's write,
@@ -434,33 +482,30 @@ class Engine:
         short sequences pay for short tables."""
         need = max(int(self.cache.lengths[i]) // self.engine_cfg.block_size
                    + 1 for i, _ in active)
-        return min(1 << math.ceil(math.log2(need)),
-                   self.cache.max_blocks_per_seq)
+        return min(self._pow2(need), self.cache.max_blocks_per_seq)
 
-    def _bucket_len(self, plen: int) -> int:
-        """Pad prompts up a pow2 ladder (block-size multiples) so a
-        serving mix of lengths shares a handful of prefill compiles."""
+    def _chunk_width(self, remaining: int) -> int:
+        """This tick's prefill chunk width: the largest remaining tail
+        rounded up a pow2 ladder (block-size multiples) so a serving
+        mix of lengths shares a handful of compiles, capped at
+        ``prefill_chunk`` — the token budget that bounds how long any
+        single tick's prefill dispatch can run."""
         bs = self.engine_cfg.block_size
-        pow2 = 1 << max(3, math.ceil(math.log2(max(plen, 1))))
-        padded = math.ceil(pow2 / bs) * bs
-        cap = self.cache.max_blocks_per_seq * bs
-        return min(max(padded, bs), cap)
-
-    def _pcap_bucket(self, n_nodes: int) -> int:
-        """Static prefix-gather width (table columns) for a hit of
-        ``n_nodes`` pages, bucketed pow2 to bound prefill compiles."""
-        if n_nodes == 0:
-            return 0
-        return min(1 << math.ceil(math.log2(n_nodes)),
-                   self.cache.max_blocks_per_seq)
+        padded = math.ceil(max(self._pow2(remaining), 8) / bs) * bs
+        cap = min(self.engine_cfg.prefill_chunk,
+                  self.cache.max_blocks_per_seq * bs)
+        return max(min(padded, cap), 1)
 
     # ----------------------------------------------------------- admission
-    def _try_place(self, st: _SeqState, expect: tuple | None):
-        """Match the trie, size the tail, and — if the prefill bucket
-        is compatible with ``expect`` — commit: pin the prefix, make
-        room (evict/preempt), splice the block table, CoW the boundary
-        page.  Returns the bucket, "mismatch", or None (cannot place).
-        """
+    def _try_place(self, st: _SeqState, *, allow_preempt: bool = True,
+                   match: tuple | None = None) -> bool:
+        """Match the trie, size the tail, and commit: pin the prefix,
+        make room (evict/preempt), splice the block table, CoW the
+        boundary page.  The sequence enters its slot with
+        ``prefill_done=False``; the chunk scheduler advances it.
+        ``match`` short-circuits the trie walk with a precomputed
+        ``(nodes, mtokens)`` (the reorder scan already did it).
+        Returns False when the pages cannot be freed."""
         prompt = st.full_prompt()
         plen = len(prompt)
         bs = self.engine_cfg.block_size
@@ -473,7 +518,8 @@ class Engine:
         nodes: list[PrefixNode] = []
         prefix_len = 0
         if self.prefix is not None:
-            matched, mtokens = self.prefix.match(prompt)
+            matched, mtokens = (match if match is not None
+                                else self.prefix.match(prompt))
             # per-node coverage: whole pages, except possibly the last
             contribs = [len(nd.key) for nd in matched]
             if matched:
@@ -491,18 +537,13 @@ class Engine:
         first_write_col = prefix_len // bs
         cow = first_write_col < len(nodes)
         need = need_total - len(nodes) + (1 if cow else 0)
-        s_pad = self._bucket_len(plen - prefix_len)
-        pcap = self._pcap_bucket(len(nodes))
-        bucket = (s_pad, pcap)
-        if expect is not None and bucket != expect:
-            return "mismatch"
 
         if self.prefix is not None:
             self.prefix.pin(nodes)     # eviction-proof before make_room
-        if not self._make_room(need, st.seq_no):
+        if not self._make_room(need, st.seq_no, allow_preempt=allow_preempt):
             if self.prefix is not None:
                 self.prefix.unpin(nodes)
-            return None
+            return False
         if self.prefix is not None:    # stats count committed admissions
             self.prefix.stats.queries += 1
             if nodes:
@@ -523,70 +564,123 @@ class Engine:
         st.slot, st.status = slot, _RUNNING
         st.pinned = nodes
         st.prefix_len = prefix_len
+        st.prefill_pos = 0
+        st.prefill_done = False
+        if st.admit_t is None:
+            st.admit_t = time.time()
         self._slots[slot] = st
-        return bucket
+        return True
 
-    def _prefill_group(self, group: list[_SeqState], s_pad: int,
-                       pcap: int) -> list[Completion]:
-        """One batched prefill over coalesced same-bucket admissions."""
-        finished: list[Completion] = []
-        toks = np.zeros((len(group), s_pad), np.int32)
-        plens = np.zeros((len(group),), np.int32)
-        slots = []
-        for g, st in enumerate(group):
-            tail = st.full_prompt()[st.prefix_len:]
-            toks[g, : len(tail)] = tail
-            plens[g] = st.prefix_len
-            slots.append(st.slot)
-            self.prefill_tokens_computed += len(tail)
+    def _admit(self) -> None:
+        """FIFO admission with prefix splicing: place up to
+        ``max_batched_prefill`` queue heads into free slots (no prompt
+        buckets — the chunk scheduler serves every admitted row at its
+        own progress in one full-width dispatch).  When the head cannot
+        get its pages, the prefix-aware fallback scans the next K=4
+        waiting requests and admits cache hits first."""
+        admitted = 0
+        while (self._queue and None in self._slots
+               and admitted < self.engine_cfg.max_batched_prefill):
+            # pop before placing: _try_place may preempt a victim onto
+            # the queue front, so a later popleft could grab the wrong
+            # element
+            st = self._queue.popleft()
+            if self._try_place(st):
+                admitted += 1
+                continue
+            self._queue.appendleft(st)    # head-of-line: wait for pages
+            self._admit_reordered(
+                self.engine_cfg.max_batched_prefill - admitted)
+            break
+
+    def _admit_reordered(self, budget: int) -> None:
+        """Prefix-aware admission (lite): the queue head is blocked on
+        pages; scan the next K=4 waiting requests and admit prefix-
+        cache hits first — their spliced pages shrink the footprint, so
+        a hit may fit where the head does not.  Reordered admissions
+        never preempt (they are the youngest work in the system), so a
+        failed attempt leaves the queue untouched; ``budget`` is what
+        remains of the tick's ``max_batched_prefill`` admission cap."""
+        if self.prefix is None:
+            return
+        idx, scanned = 1, 0
+        while (idx < len(self._queue) and scanned < 4 and budget > 0
+               and None in self._slots):
+            st = self._queue[idx]
+            scanned += 1
+            match = self.prefix.match(st.full_prompt())
+            if match[1] == 0:
+                idx += 1
+                continue
+            del self._queue[idx]
+            if self._try_place(st, allow_preempt=False, match=match):
+                self.admission_reorders += 1
+                budget -= 1
+                # the next candidate shifted into idx
+            else:
+                self._queue.insert(idx, st)
+                idx += 1
+
+    # ------------------------------------------------------ chunk prefill
+    def _prefill_tick(self) -> list[Completion]:
+        """Advance every prefilling slot by one chunk in ONE full-width
+        dispatch.  The chunk width is the largest remaining tail
+        (pow2-bucketed) capped at ``prefill_chunk``; rows that are
+        decoding or empty ride along with a zero-length slice (start =
+        length ⇒ nothing written, zero attention), so one compile per
+        (width, cols) pair serves every mix of progress states.  Rows
+        whose prompt completes this tick sample their first token from
+        the dispatch's logits."""
+        pref = [(i, st) for i, st in enumerate(self._slots)
+                if st is not None and not st.prefill_done]
+        if not pref:
+            return []
+        ec = self.engine_cfg
+        bs = ec.block_size
+        remaining = max(len(st.full_prompt()) - st.prefix_len - st.prefill_pos
+                        for _, st in pref)
+        w = self._chunk_width(remaining)
+        toks = np.zeros((ec.num_slots, w), np.int32)
+        # non-prefilling rows: start = length ⇒ zero valid tokens
+        start = np.asarray(self.cache.lengths, np.int32).copy()
+        takes: dict[int, int] = {}
+        cols_need = 1
+        for i, st in pref:
+            prompt = st.full_prompt()
+            s0 = st.prefix_len + st.prefill_pos
+            take = min(w, len(prompt) - s0)
+            toks[i, :take] = prompt[s0:s0 + take]
+            start[i] = s0
+            takes[i] = take
+            self.prefill_tokens_computed += take
+            cols_need = max(cols_need, -(-(s0 + take) // bs))
         self.prefill_batches += 1
+        cols = min(self._pow2(cols_need), self.cache.max_blocks_per_seq)
+
         t0 = time.time()
         nxt_dev, view = self._prefill(
-            self.params, jnp.asarray(toks), self.cache.view(slots=slots),
-            jnp.asarray(plens), self.cfg, pcap)
-        nxt = np.asarray(nxt_dev)
+            self.params, jnp.asarray(toks), self.cache.view(cols=cols),
+            jnp.asarray(start), self.cfg)
+        nxt = np.asarray(nxt_dev)   # blocks until the dispatch is done
         dt = time.time() - t0
         self.cache.update_pages(view)
-        for g, st in enumerate(group):
-            st.prefill_s += dt      # coalesced admissions share the stamp
+
+        finished: list[Completion] = []
+        for i, st in pref:
+            st.prefill_s += dt      # coalesced rows share the stamp
+            st.prefill_pos += takes[i]
+            if st.prefix_len + st.prefill_pos < len(st.full_prompt()):
+                continue            # more chunks to go
+            st.prefill_done = True
             r = st.request
             if r.max_new_tokens > 0 and len(st.tokens) < r.max_new_tokens:
-                tok = int(nxt[g])
+                tok = int(nxt[i])
                 st.tokens.append(tok)
                 st.next_token = tok
+            if st.first_token_t is None and st.tokens:
+                st.first_token_t = time.time()
             if self._should_stop(st):
-                finished.append(self._retire(st.slot))
-        return finished
-
-    def _admit(self) -> list[Completion]:
-        """FIFO admission with prefix splicing and batched prefill:
-        coalesce up to ``max_batched_prefill`` consecutive queue heads
-        that share a (tail-bucket, prefix-bucket) compile signature
-        into one ``prefill_into_cache`` call."""
-        finished: list[Completion] = []
-        blocked = False
-        while not blocked and self._queue and None in self._slots:
-            group: list[_SeqState] = []
-            bucket: tuple | None = None
-            while (self._queue and None in self._slots
-                   and len(group) < self.engine_cfg.max_batched_prefill):
-                # pop before placing: _try_place may preempt a victim
-                # onto the queue front, so a later popleft could grab
-                # the wrong element
-                st = self._queue.popleft()
-                placed = self._try_place(st, bucket)
-                if placed == "mismatch":
-                    self._queue.appendleft(st)
-                    break                 # flush; next outer pass takes it
-                if placed is None:
-                    self._queue.appendleft(st)
-                    blocked = True        # head-of-line: wait for pages
-                    break
-                bucket = placed
-                group.append(st)
-            if not group:
-                break
-            finished.extend(self._prefill_group(group, *bucket))
+                finished.append(self._retire(i))
         return finished
 
 

@@ -42,7 +42,7 @@ class InferenceServer:
                  quant_bits: int | None = None, max_len: int = 512,
                  kv_dtype: str | jnp.dtype = "float32",
                  num_slots: int = 8, block_size: int = 16,
-                 prefix_cache: bool = True):
+                 prefix_cache: bool = True, prefill_chunk: int = 256):
         """``kv_dtype``: KV-cache storage dtype — "float32"/"bfloat16"
         for full fidelity, "float8_e4m3fn" for the narrow-byte cache
         (dequantized in-kernel by ``decode_gqa``).  ``num_slots`` /
@@ -51,7 +51,10 @@ class InferenceServer:
         trie so later requests sharing a prompt prefix (system prompt,
         few-shot header, chat history) skip re-prefilling it; the
         engine persists across ``generate`` calls, so so does the
-        cache.  Disable for a cold-path baseline."""
+        cache.  Disable for a cold-path baseline.  ``prefill_chunk``
+        bounds how many prompt tokens one scheduler tick may prefill
+        per sequence (chunked flash prefill) — long prompts interleave
+        with running decodes instead of monopolizing a tick."""
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         self.max_len = max_len
@@ -59,6 +62,7 @@ class InferenceServer:
         self.num_slots = num_slots
         self.block_size = block_size
         self.prefix_cache = prefix_cache
+        self.prefill_chunk = prefill_chunk
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
                                    dtype=jnp.float32)
@@ -95,7 +99,8 @@ class InferenceServer:
             num_slots=self.num_slots,
             block_size=self.block_size,
             max_seq_len=self._engine_max_seq,
-            prefix_cache=self.prefix_cache)
+            prefix_cache=self.prefix_cache,
+            prefill_chunk=self.prefill_chunk)
         if self.last_engine is None or self.last_engine.engine_cfg != ec:
             self.last_engine = Engine(self.cfg, params=self.params,
                                       engine=ec, kv_dtype=self.kv_dtype)

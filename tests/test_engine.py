@@ -256,12 +256,36 @@ class TestEngine:
         eng.check_partition()
 
     def test_f8_kv_pages_match_f8_bucketed(self):
+        """f8 pages quantize KV once, at write time; *every* attend —
+        prefill chunks included — dequantizes the narrow bytes
+        in-kernel.  The bucketed baseline instead attends the prompt in
+        full precision and only stores f8, so the paged path carries
+        one extra rounding through prefill and greedy tokens diverge
+        within tolerance rather than bit-for-bit."""
         cfg = tiny_cfg()
         _, ref, out = self._serve_both(cfg, self.LENS[:4], self.NEWS[:4],
                                        kv_dtype="float8_e4m3fn")
         agree = np.mean([np.mean(a.tokens == b.tokens)
                          for a, b in zip(ref, out)])
-        assert agree >= 0.95, agree
+        assert agree >= 0.8, agree
+
+    def test_f8_chunked_equals_unchunked(self):
+        """The internal-consistency property the quantize-at-write
+        semantic buys: a position's KV reads back identically whichever
+        chunk wrote it, so the f8 engine is token-identical at any
+        chunk size."""
+        cfg = tiny_cfg()
+        reqs = mixed_requests(cfg, self.LENS[:4], self.NEWS[:4])
+        outs = []
+        for chunk in (256, 8):
+            eng = Engine(cfg, engine=EngineConfig(
+                num_slots=3, block_size=8, max_seq_len=192,
+                prefill_chunk=chunk), kv_dtype="float8_e4m3fn")
+            outs.append(eng.generate(
+                [Request(r.uid, r.prompt, r.max_new_tokens)
+                 for r in reqs]))
+        for a, b in zip(*outs):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
 
     def test_block_boundary_crossing_mid_decode(self):
         """A sequence whose decode run crosses page boundaries keeps

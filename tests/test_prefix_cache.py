@@ -236,7 +236,7 @@ class TestOffsetPrefill:
         tail[0, : plen - prefix_len] = prompt[prefix_len:]
         logits_warm, view_warm = api.prefill_into_cache(
             params, jnp.asarray(tail), warm.view(), cfg,
-            jnp.asarray([prefix_len], jnp.int32), prefix_blocks=pblocks)
+            jnp.asarray([prefix_len], jnp.int32))
 
         np.testing.assert_allclose(np.asarray(logits_warm[0, -1]),
                                    np.asarray(logits_cold[0, -1]),
@@ -379,18 +379,21 @@ class TestEnginePrefix:
         for a, b in zip(out, ref):
             np.testing.assert_array_equal(a.tokens, b.tokens)
 
-    def test_mixed_bucket_admission_splits_groups(self):
+    def test_mixed_length_admission_shares_one_dispatch(self):
+        """Prompt-length buckets are gone from admission: mixed lengths
+        coalesce into ONE chunked prefill dispatch (the start offset is
+        per-row data, not a compile-time shape)."""
         cfg = tiny_cfg()
         eng = Engine(cfg, engine=EngineConfig(num_slots=4, block_size=8,
                                               max_seq_len=96,
                                               prefix_cache=False))
         rng = np.random.default_rng(8)
-        lens = [9, 9, 40, 40]                     # two prefill buckets
+        lens = [9, 9, 40, 40]                     # formerly two buckets
         reqs = [Request(i, rng.integers(0, cfg.vocab_size,
                                         l).astype(np.int32),
                         max_new_tokens=3) for i, l in enumerate(lens)]
         out = eng.generate(reqs)
-        assert eng.prefill_batches == 2
+        assert eng.prefill_batches == 1
         ref = self._cold_reference(cfg, eng.params, reqs, max_seq=96)
         for a, b in zip(out, ref):
             np.testing.assert_array_equal(a.tokens, b.tokens)
