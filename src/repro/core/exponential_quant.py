@@ -30,6 +30,38 @@ import jax.numpy as jnp
 import numpy as np
 
 
+class QTensor(NamedTuple):
+    """Unified quantized-operand carrier: uint8 DNA-TEQ codes plus their
+    256-entry decode table and packed fit parameters.
+
+    Weights have always travelled as the structurally-identical leaf
+    dict (:func:`pack_qtensor` — kept as the on-tree format so
+    checkpoints/sharding rules are untouched); *activations* flow
+    between layers as ``QTensor`` values.  Both satisfy
+    :func:`is_qtensor` and unpack through :func:`qt_parts`, so every
+    matmul dispatch site treats the two operands uniformly.  Being a
+    NamedTuple it is a pytree: act codes cross jit/scan boundaries as
+    bytes, never decoded outside a kernel on the fused path.
+    """
+
+    codes: jax.Array   # uint8, the logical tensor shape
+    lut: jax.Array     # [256] decode table
+    qmeta: jax.Array   # [4] (alpha, beta, base, bits)
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self.codes.shape
+
+    @property
+    def ndim(self) -> int:
+        return self.codes.ndim
+
+    @property
+    def dtype(self):
+        """The carrier's *decode* dtype (what consumers compute in)."""
+        return self.lut.dtype
+
+
 class ExpQuantParams(NamedTuple):
     """Per-tensor parameters of the exponential quantizer."""
 
@@ -93,6 +125,46 @@ def decode_table(params: ExpQuantParams, dtype=jnp.float32) -> jax.Array:
 def decode(codes: jax.Array, params: ExpQuantParams, dtype=jnp.float32) -> jax.Array:
     """Dequantize codes via the 256-entry LUT gather."""
     return decode_table(params, dtype)[codes.astype(jnp.int32)]
+
+
+def pack_qmeta(params: ExpQuantParams) -> jax.Array:
+    """[4] float32 (alpha, beta, base, bits) — the packed form the
+    kernels take and :func:`encode_meta`/:func:`decode_meta` consume."""
+    return jnp.stack(
+        [jnp.asarray(params.alpha, jnp.float32),
+         jnp.asarray(params.beta, jnp.float32),
+         jnp.asarray(params.base, jnp.float32),
+         jnp.float32(params.bits)])
+
+
+def encode_meta(x: jax.Array, qmeta: jax.Array) -> jax.Array:
+    """Encode to uint8 codes from a *packed* ``[4]`` qmeta array.
+
+    Unlike :func:`encode` this treats ``bits`` as data (a traced f32),
+    which is what the in-kernel quantize epilogue and the activation
+    path need: per-layer metas ride through ``lax.scan`` as arrays.
+    Matches :func:`encode` bit-for-bit for the same parameters.
+    """
+    alpha, beta, base, bits = qmeta[0], qmeta[1], qmeta[2], qmeta[3]
+    e_min = -jnp.exp2(bits - 1.0)
+    e_max = jnp.exp2(bits - 1.0) - 1.0
+    mag = jnp.abs(x).astype(jnp.float32)
+    arg = jnp.maximum((mag - beta) / alpha, 1e-30)
+    e = jnp.clip(jnp.round(jnp.log(arg) / jnp.log(base)), e_min, e_max)
+    biased = (e - e_min).astype(jnp.uint8)
+    return ((x < 0).astype(jnp.uint8) << 7) | biased
+
+
+def decode_meta(codes: jax.Array, qmeta: jax.Array,
+                dtype=jnp.float32) -> jax.Array:
+    """ALU decode from a packed ``[4]`` qmeta array (no table)."""
+    alpha, beta, base, bits = qmeta[0], qmeta[1], qmeta[2], qmeta[3]
+    e_min = -jnp.exp2(bits - 1.0)
+    c = codes.astype(jnp.int32)
+    sign = 1.0 - 2.0 * (c >> 7).astype(jnp.float32)
+    e = (c & 0x7F).astype(jnp.float32) + e_min
+    mag = alpha * jnp.exp(e * jnp.log(base)) + beta
+    return (sign * mag).astype(dtype)
 
 
 def _ls_alpha_beta(powers: jax.Array, mag: jax.Array, weights: jax.Array):
@@ -208,12 +280,20 @@ def pack_qtensor(codes: jax.Array, params: ExpQuantParams, dtype=jnp.float32) ->
     return {
         "codes": codes,
         "lut": decode_table(params, dtype),
-        "qmeta": jnp.stack(
-            [params.alpha.astype(jnp.float32), params.beta.astype(jnp.float32),
-             params.base.astype(jnp.float32), jnp.float32(params.bits)]
-        ),
+        "qmeta": pack_qmeta(params),
     }
 
 
 def is_qtensor(leaf) -> bool:
+    """True for either quantized-operand carrier: the weight leaf dict
+    or the activation :class:`QTensor`."""
+    if isinstance(leaf, QTensor):
+        return True
     return isinstance(leaf, dict) and "codes" in leaf and "lut" in leaf
+
+
+def qt_parts(leaf) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """(codes, lut, qmeta) from either carrier form."""
+    if isinstance(leaf, QTensor):
+        return leaf.codes, leaf.lut, leaf.qmeta
+    return leaf["codes"], leaf["lut"], leaf["qmeta"]

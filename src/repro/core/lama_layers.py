@@ -1,5 +1,6 @@
-"""Lama-quantized layers: drop-in dense/einsum that accept either plain
-weights or DNA-TEQ code tensors (DESIGN.md §2b).
+"""Lama-quantized layers: drop-in dense/einsum over a *unified*
+operand-quantization abstraction — weights AND activations may arrive
+as DNA-TEQ code carriers (DESIGN.md §Quantization).
 
 Every matmul in the model zoo funnels through :func:`dense` /
 :func:`dense_general`.  A weight leaf is either
@@ -8,6 +9,15 @@ Every matmul in the model zoo funnels through :func:`dense` /
 * a qtensor dict ``{"codes": uint8, "lut": [256], "qmeta": [4]}``
   produced by :func:`quantize_tree` — codes live in HBM (1 B/param), the
   256-entry decode LUT is the VMEM-resident "open row".
+
+An *activation* operand is either a float array or a
+:class:`~repro.core.exponential_quant.QTensor` (the structurally
+identical carrier, produced by :func:`encode_act` against calibrated
+per-tensor params or emitted straight from a kernel's quantize
+epilogue).  When both operands are carriers, dispatch goes to the
+dual-LUT kernel (paper Eq.1: both operands as exponent codes) and, with
+``out_quant`` set, the result comes back as codes too — consecutive
+quantized matmuls are code-in/code-out with no f32 intermediate in HBM.
 
 **Fused is the default execution path** (this is the paper's whole
 premise — never materialize the wide operand): any einsum spec the zoo
@@ -55,6 +65,10 @@ class FusedPolicy:
     fuse_epilogues: bool = True     # act/bias/gate epilogues in-kernel
     flash_decode: bool = True       # decode_gqa kernel in decode_step
     autotune: bool | None = None    # None = only on real TPU
+    act_quant: bool = True          # honor act-quant params when present
+                                    # (calibrated metas ride the params
+                                    # tree; False A/B-disables encoding
+                                    # without re-calibrating)
 
 
 _POLICY = FusedPolicy()
@@ -92,10 +106,36 @@ def _fused_enabled() -> bool:
 
 
 def materialize(w, dtype=jnp.bfloat16) -> jax.Array:
-    """Decode a weight leaf to a dense array of ``dtype``."""
+    """Decode a quantized carrier (weight leaf dict or activation
+    :class:`~repro.core.exponential_quant.QTensor`) to a dense array of
+    ``dtype``.  This is the ONLY place codes become floats outside a
+    kernel — the zero-materialization tests guard it."""
     if eq.is_qtensor(w):
-        return w["lut"].astype(dtype)[w["codes"].astype(jnp.int32)]
+        codes, lut, _ = eq.qt_parts(w)
+        return lut.astype(dtype)[codes.astype(jnp.int32)]
     return w.astype(dtype)
+
+
+def encode_act(x: jax.Array, aq: dict) -> eq.QTensor:
+    """Encode an activation against calibrated per-tensor params.
+
+    ``aq`` is one act-quant site entry ``{"lut": [256], "qmeta": [4]}``
+    (per-layer slices of the calibrated tree that rides inside
+    ``params["blocks"]["act_q"]``).  The result is a :class:`QTensor`
+    carrier that every dense/einsum dispatch site accepts in place of a
+    float array — downstream matmuls read uint8 codes from HBM and
+    decode in-kernel."""
+    return eq.QTensor(eq.encode_meta(x, aq["qmeta"]), aq["lut"],
+                      aq["qmeta"])
+
+
+def maybe_encode_act(x, act_q, site: str):
+    """Encode ``x`` when act-quant params for ``site`` are present and
+    the policy honors them; pass the float through otherwise."""
+    if (act_q is None or not _POLICY.act_quant
+            or not isinstance(act_q, dict) or site not in act_q):
+        return x
+    return encode_act(x, act_q[site])
 
 
 # ----------------------------------------------------------------------
@@ -160,20 +200,33 @@ def _prod(dims) -> int:
     return out
 
 
-def _fused_einsum(x: jax.Array, w: dict, plan: _EinsumPlan, spec: str,
+def _fused_einsum(x, w: dict, plan: _EinsumPlan, spec: str,
                   cdtype) -> jax.Array:
     """Execute a canonicalized einsum against qtensor codes through the
-    fused kernel.  Codes cross as uint8; the decode happens in-kernel."""
+    fused kernel.  Codes cross as uint8; the decode happens in-kernel.
+
+    ``x`` may itself be an activation :class:`QTensor` — then BOTH
+    operands cross as codes and the dual-LUT kernel decodes each
+    through its own table (batched specs vmap the dual kernel the same
+    way)."""
     from repro.kernels.lut_dequant_matmul import ops as _ops
 
     codes, lut, qmeta = w["codes"], w["lut"], w["qmeta"]
+    x_is_q = isinstance(x, eq.QTensor)
+    if x_is_q and not plan.batch and codes.ndim == 2 \
+            and plan.w_perm == (1, 0):
+        # transposed-codes layout (tied unembedding) has no dual
+        # variant: decode the act operand and take the fp-act path
+        x = materialize(x, jnp.float32)
+        x_is_q = False
+    xarr = x.codes if x_is_q else x
     xs, ws = spec.replace(" ", "").split("->")[0].split(",")
-    xdims = dict(zip(xs, x.shape))
+    xdims = dict(zip(xs, xarr.shape))
     wdims = dict(zip(ws, codes.shape))
     for l in plan.contract + plan.batch:
         if l in xdims and l in wdims and xdims[l] != wdims[l]:
             raise ValueError(f"dim mismatch for '{l}' in {spec}: "
-                             f"{x.shape} vs {codes.shape}")
+                             f"{xarr.shape} vs {codes.shape}")
     b_shape = tuple(xdims[l] for l in plan.batch)
     m_shape = tuple(xdims[l] for l in plan.xfree)
     k_shape = tuple(wdims[l] for l in plan.contract)
@@ -181,7 +234,7 @@ def _fused_einsum(x: jax.Array, w: dict, plan: _EinsumPlan, spec: str,
     b, m, k, n = (_prod(b_shape), _prod(m_shape),
                   _prod(k_shape), _prod(n_shape))
 
-    xt = _maybe_transpose(x, plan.x_perm)
+    xt = _maybe_transpose(xarr, plan.x_perm)
     pol = _POLICY
     # A pure 2-D [N, K] -> [K, N] weight swap (tied unembedding) is
     # handled by the kernel's transposed-codes layout: no HBM transpose
@@ -189,10 +242,16 @@ def _fused_einsum(x: jax.Array, w: dict, plan: _EinsumPlan, spec: str,
     kernel_transpose = (not plan.batch and codes.ndim == 2
                         and plan.w_perm == (1, 0))
     ct = codes if kernel_transpose else _maybe_transpose(codes, plan.w_perm)
-    call = functools.partial(
-        _ops.lut_dequant_matmul, lut=lut, qmeta=qmeta,
-        decode_mode=pol.decode_mode, out_dtype=jnp.float32,
-        autotune=pol.autotune)
+    if x_is_q:
+        call = functools.partial(
+            _ops.lut_dequant_matmul_dual, lut_x=x.lut, lut_w=lut,
+            qmeta_x=x.qmeta, qmeta_w=qmeta, decode_mode=pol.decode_mode,
+            out_dtype=jnp.float32, autotune=pol.autotune)
+    else:
+        call = functools.partial(
+            _ops.lut_dequant_matmul, lut=lut, qmeta=qmeta,
+            decode_mode=pol.decode_mode, out_dtype=jnp.float32,
+            autotune=pol.autotune)
     if plan.batch:
         x2 = xt.reshape((b, m, k))
         c2 = ct.reshape((b, k, n))
@@ -206,12 +265,21 @@ def _fused_einsum(x: jax.Array, w: dict, plan: _EinsumPlan, spec: str,
     return out.astype(cdtype)
 
 
-def dense(x: jax.Array, w, *, dtype=None, epilogue: str | None = None,
-          bias=None) -> jax.Array:
-    """``x @ w`` where ``w`` may be quantized.  Contracts last axis of x
-    with first axis of w.  ``epilogue``/``bias`` fuse an activation
-    (gelu/silu/relu) and a bias add into the kernel flush."""
-    cdtype = dtype or x.dtype
+def dense(x, w, *, dtype=None, epilogue: str | None = None,
+          bias=None, out_quant: dict | None = None):
+    """``x @ w`` where *either operand* may be quantized.  Contracts the
+    last axis of x with the first axis of w.  ``epilogue``/``bias``
+    fuse an activation (gelu/silu/relu) and a bias add into the kernel
+    flush.
+
+    ``x`` may be an activation :class:`QTensor` — then both operands
+    cross HBM as uint8 codes and the dual-LUT kernel decodes each
+    in-kernel.  ``out_quant`` (an act-quant site entry
+    ``{"lut", "qmeta"}``) turns on the quantize epilogue: the result is
+    returned as a :class:`QTensor` re-encoded in-kernel against those
+    params, so consecutive quantized matmuls stay code-in/code-out."""
+    x_is_q = isinstance(x, eq.QTensor)
+    cdtype = dtype or (jnp.float32 if x_is_q else x.dtype)
     if eq.is_qtensor(w):
         if _fused_enabled() and w["codes"].ndim == 2:
             from repro.kernels.lut_dequant_matmul import ops as _ops
@@ -219,25 +287,54 @@ def dense(x: jax.Array, w, *, dtype=None, epilogue: str | None = None,
             pol = _POLICY
             fuse_ep = pol.fuse_epilogues
             lead = x.shape[:-1]
-            x2 = x.reshape((-1, x.shape[-1]))
-            out = _ops.lut_dequant_matmul(
-                x2, w["codes"], w["lut"], w["qmeta"],
-                decode_mode=pol.decode_mode,
-                epilogue=epilogue if fuse_ep else None,
-                bias=bias if fuse_ep else None,
-                out_dtype=jnp.float32, autotune=pol.autotune)
-            out = out.reshape(lead + (w["codes"].shape[-1],))
+            n = w["codes"].shape[-1]
+            if x_is_q:
+                x2 = x.codes.reshape((-1, x.shape[-1]))
+                out = _ops.lut_dequant_matmul_dual(
+                    x2, w["codes"], x.lut, w["lut"], x.qmeta, w["qmeta"],
+                    decode_mode=pol.decode_mode,
+                    epilogue=epilogue if fuse_ep else None,
+                    bias=bias if fuse_ep else None,
+                    out_qmeta=(out_quant["qmeta"]
+                               if out_quant is not None and fuse_ep
+                               else None),
+                    out_dtype=jnp.float32, autotune=pol.autotune)
+                if out_quant is not None and fuse_ep:
+                    return eq.QTensor(out.reshape(lead + (n,)),
+                                      out_quant["lut"], out_quant["qmeta"])
+            else:
+                out = _ops.lut_dequant_matmul(
+                    x.reshape((-1, x.shape[-1])), w["codes"],
+                    w["lut"], w["qmeta"],
+                    decode_mode=pol.decode_mode,
+                    epilogue=epilogue if fuse_ep else None,
+                    bias=bias if fuse_ep else None,
+                    out_dtype=jnp.float32, autotune=pol.autotune)
+            out = out.reshape(lead + (n,))
             if not fuse_ep:
                 out = _epilogue_jnp(out, epilogue, bias)
-            return out.astype(cdtype)
+            out = out.astype(cdtype)
+            return _finish_out(out, out_quant)
         wf = materialize(w, cdtype)
-        out = jnp.matmul(x.astype(cdtype), wf,
-                         preferred_element_type=jnp.float32)
-        return _epilogue_jnp(out, epilogue, bias).astype(cdtype)
+        xf = materialize(x, cdtype) if x_is_q else x.astype(cdtype)
+        out = jnp.matmul(xf, wf, preferred_element_type=jnp.float32)
+        out = _epilogue_jnp(out, epilogue, bias).astype(cdtype)
+        return _finish_out(out, out_quant)
+    xf = materialize(x, cdtype) if x_is_q else x.astype(cdtype)
     out = jnp.matmul(
-        x.astype(cdtype), w.astype(cdtype),
-        preferred_element_type=jnp.float32)
-    return _epilogue_jnp(out, epilogue, bias).astype(cdtype)
+        xf, w.astype(cdtype), preferred_element_type=jnp.float32)
+    out = _epilogue_jnp(out, epilogue, bias).astype(cdtype)
+    return _finish_out(out, out_quant)
+
+
+
+def _finish_out(out, out_quant: dict | None):
+    """Shared host-side tail: re-encode against the requested output
+    params (a :class:`QTensor` comes back) or pass the float through —
+    every non-in-kernel-epilogue path in dense/gated_mlp ends here."""
+    if out_quant is not None:
+        return encode_act(out, out_quant)
+    return out
 
 
 def _epilogue_jnp(out: jax.Array, epilogue: str | None, bias) -> jax.Array:
@@ -250,14 +347,17 @@ def _epilogue_jnp(out: jax.Array, epilogue: str | None, bias) -> jax.Array:
     return apply_activation(out, epilogue)
 
 
-def dense_general(x: jax.Array, w, contract_spec: str, *,
-                  dtype=None) -> jax.Array:
-    """Einsum with a possibly-quantized weight, e.g. 'bsd,dnh->bsnh'.
+def dense_general(x, w, contract_spec: str, *, dtype=None) -> jax.Array:
+    """Einsum with possibly-quantized operands, e.g. 'bsd,dnh->bsnh'.
 
     Quantized weights dispatch through the fused kernel for every spec
     the canonicalizer can express as a (batched) 2-D matmul — codes are
-    reshaped/byte-transposed, never decoded outside the kernel."""
-    cdtype = dtype or x.dtype
+    reshaped/byte-transposed, never decoded outside the kernel.  An
+    activation :class:`QTensor` rides the same plan: its codes take x's
+    transposes/reshapes as bytes and the dual-LUT kernel decodes both
+    operands in-kernel."""
+    x_is_q = isinstance(x, eq.QTensor)
+    cdtype = dtype or (jnp.float32 if x_is_q else x.dtype)
     if eq.is_qtensor(w) and _fused_enabled():
         plan = _einsum_plan(contract_spec)
         if plan is not None and w["codes"].ndim == \
@@ -265,20 +365,26 @@ def dense_general(x: jax.Array, w, contract_spec: str, *,
                     .split(",")[1]):
             return _fused_einsum(x, w, plan, contract_spec, cdtype)
     wf = materialize(w, cdtype)
+    xf = materialize(x, cdtype) if x_is_q else x.astype(cdtype)
     return jnp.einsum(
-        contract_spec, x.astype(cdtype), wf, preferred_element_type=jnp.float32
+        contract_spec, xf, wf, preferred_element_type=jnp.float32
     ).astype(cdtype)
 
 
-def gated_mlp(x: jax.Array, w_gate, w_up, activation: str, *,
-              dtype=None) -> jax.Array:
+def gated_mlp(x, w_gate, w_up, activation: str, *,
+              dtype=None, out_quant: dict | None = None):
     """``act(x @ w_gate) * (x @ w_up)`` — the gated-MLP front half.
 
     When both weights are quantized 2-D qtensors, this runs as ONE fused
     dual-matmul kernel (shared x DMA, both decodes in VMEM, the gate
-    intermediate never reaches HBM).  Falls back to two dense calls
-    otherwise."""
-    cdtype = dtype or x.dtype
+    intermediate never reaches HBM).  An activation :class:`QTensor`
+    ``x`` upgrades it to the dual-LUT variant (act codes decoded
+    in-kernel too); ``out_quant`` re-encodes the gated flush in-kernel
+    and returns a :class:`QTensor`, so the down projection reads codes
+    — the MLP intermediate never exists as f32 in HBM.  Falls back to
+    two dense calls otherwise."""
+    x_is_q = isinstance(x, eq.QTensor)
+    cdtype = dtype or (jnp.float32 if x_is_q else x.dtype)
     pol = _POLICY
     if (eq.is_qtensor(w_gate) and eq.is_qtensor(w_up)
             and _fused_enabled() and pol.fuse_epilogues
@@ -287,15 +393,32 @@ def gated_mlp(x: jax.Array, w_gate, w_up, activation: str, *,
         from repro.kernels.lut_dequant_matmul import ops as _ops
 
         lead = x.shape[:-1]
-        x2 = x.reshape((-1, x.shape[-1]))
-        out = _ops.lut_dequant_matmul_gated(
-            x2, w_gate["codes"], w_up["codes"], w_gate["lut"], w_up["lut"],
-            w_gate["qmeta"], w_up["qmeta"], activation=activation,
-            decode_mode=pol.decode_mode, out_dtype=jnp.float32,
-            autotune=pol.autotune)
-        return out.reshape(lead + (w_gate["codes"].shape[-1],)).astype(cdtype)
+        n = w_gate["codes"].shape[-1]
+        if x_is_q:
+            x2 = x.codes.reshape((-1, x.shape[-1]))
+            out = _ops.lut_dequant_matmul_dual_gated(
+                x2, w_gate["codes"], w_up["codes"], x.lut,
+                w_gate["lut"], w_up["lut"], x.qmeta, w_gate["qmeta"],
+                w_up["qmeta"], activation=activation,
+                out_qmeta=(out_quant["qmeta"] if out_quant is not None
+                           else None),
+                decode_mode=pol.decode_mode, out_dtype=jnp.float32,
+                autotune=pol.autotune)
+            if out_quant is not None:
+                return eq.QTensor(out.reshape(lead + (n,)),
+                                  out_quant["lut"], out_quant["qmeta"])
+        else:
+            out = _ops.lut_dequant_matmul_gated(
+                x.reshape((-1, x.shape[-1])), w_gate["codes"],
+                w_up["codes"], w_gate["lut"], w_up["lut"],
+                w_gate["qmeta"], w_up["qmeta"], activation=activation,
+                decode_mode=pol.decode_mode, out_dtype=jnp.float32,
+                autotune=pol.autotune)
+        out = out.reshape(lead + (n,)).astype(cdtype)
+        return _finish_out(out, out_quant)
     g = dense(x, w_gate, dtype=cdtype, epilogue=activation)
-    return (g * dense(x, w_up, dtype=cdtype)).astype(cdtype)
+    out = (g * dense(x, w_up, dtype=cdtype)).astype(cdtype)
+    return _finish_out(out, out_quant)
 
 
 def embed_lookup(w, idx: jax.Array, dtype) -> jax.Array:

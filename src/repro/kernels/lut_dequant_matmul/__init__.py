@@ -2,9 +2,13 @@ from repro.kernels.lut_dequant_matmul import ops  # noqa: F401
 from repro.kernels.lut_dequant_matmul.ops import (  # noqa: F401
     bucket_m,
     lut_dequant_matmul,
+    lut_dequant_matmul_dual,
+    lut_dequant_matmul_dual_gated,
     lut_dequant_matmul_gated,
 )
 from repro.kernels.lut_dequant_matmul.ref import (  # noqa: F401
+    lut_dequant_matmul_dual_gated_ref,
+    lut_dequant_matmul_dual_ref,
     lut_dequant_matmul_gated_ref,
     lut_dequant_matmul_ref,
 )

@@ -22,9 +22,24 @@ block (w_gate and w_up share the [K, N] geometry in every gated MLP of
 the zoo) and flushes ``act(x@w_g) * (x@w_u)`` — the 3-round-trip MLP
 front half collapses into one kernel.
 
+Dual-operand variants (the LamaAccel Eq.1 execution path): *both*
+operands arrive as uint8 DNA-TEQ codes and each decodes through its own
+256-entry table inside the kernel — activations cross HBM as 1 B/elem
+exactly like weights, and the f32 activation tensor never exists in
+HBM.  An optional **quantize epilogue** re-encodes the flushed output
+tile against a third (calibrated) parameter set and stores uint8 codes,
+so chains of quantized matmuls stay code-in/code-out: the only f32 form
+of the intermediate is the VMEM accumulator tile.
+
 Grid: (M/bm, N/bn, K/bk), K innermost ("arbitrary"); fp32 VMEM scratch
 accumulator(s), flushed to the output tile on the last K step.  MXU dims
 (bm, bk, bn) default to 128-multiples.
+
+K-padding note: with a *float* activation operand, padded K positions
+contribute zero automatically (x is zero-padded).  With a *code*
+operand, the pad byte 0 decodes to ``±(alpha·base^e_min + beta) ≠ 0``,
+so the dual kernels mask the decoded activation tile against the true
+contraction length (``k_valid``) before the MXU op.
 """
 
 from __future__ import annotations
@@ -36,6 +51,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.exponential_quant import decode_meta, encode_meta
 from repro.kernels._compat import CompilerParams
 
 EPILOGUES = ("gelu", "silu", "relu")
@@ -46,13 +62,10 @@ def _decode_gather(lut_row: jax.Array, codes: jax.Array) -> jax.Array:
 
 
 def _decode_alu(qmeta: jax.Array, codes: jax.Array) -> jax.Array:
-    alpha, beta, base, bits = qmeta[0], qmeta[1], qmeta[2], qmeta[3]
-    e_min = -jnp.exp2(bits - 1.0)
-    c = codes.astype(jnp.int32)
-    sign = 1.0 - 2.0 * (c >> 7).astype(jnp.float32)
-    e = (c & 0x7F).astype(jnp.float32) + e_min
-    mag = alpha * jnp.exp(e * jnp.log(base)) + beta
-    return sign * mag
+    # one ALU decode formula repo-wide: the counting≡dual-LUT identity
+    # and the calibration cache's hit-is-bit-identical guarantee both
+    # rely on kernel and host decoding codes the same way
+    return decode_meta(codes, qmeta)
 
 
 def apply_activation(x: jax.Array, kind: str | None) -> jax.Array:
@@ -235,3 +248,202 @@ def lut_dequant_matmul_gated_kernel(
     )(x, codes_g.astype(jnp.uint8), codes_u.astype(jnp.uint8),
       luts.reshape(2, 256).astype(jnp.float32),
       qmetas.reshape(2, 4).astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------
+# Dual-operand variants: activation codes decoded in-kernel too
+# ---------------------------------------------------------------------
+
+def _decode_act_tile(luts_ref, qmetas_ref, codes, row: int,
+                     decode_mode: str, k_valid: int | None, bk: int):
+    """Decode one activation code tile through table ``row`` and zero
+    the K positions past the true contraction length (pad byte 0 is a
+    *live* code, unlike a zero float)."""
+    if decode_mode == "gather":
+        a = _decode_gather(luts_ref[row, :], codes)
+    else:
+        a = _decode_alu(qmetas_ref[row, :], codes)
+    if k_valid is not None:
+        kpos = (pl.program_id(2) * bk
+                + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1))
+        a = jnp.where(kpos < k_valid, a, 0.0)
+    return a
+
+
+def _dual_kernel(xc_ref, wc_ref, luts_ref, qmetas_ref, bias_ref, o_ref,
+                 acc_ref, *, decode_mode: str, epilogue: str | None,
+                 has_bias: bool, out_quant: bool, k_valid: int | None,
+                 bk: int, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = _decode_act_tile(luts_ref, qmetas_ref, xc_ref[...], 0,
+                         decode_mode, k_valid, bk)       # [bm, bk]
+    if decode_mode == "gather":
+        w = _decode_gather(luts_ref[1, :], wc_ref[...])  # [bk, bn]
+    else:
+        w = _decode_alu(qmetas_ref[1, :], wc_ref[...])
+    acc_ref[...] += jnp.dot(a, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        acc = acc_ref[...]
+        if has_bias:
+            acc = acc + bias_ref[0, :][None, :]
+        acc = apply_activation(acc, epilogue)
+        if out_quant:
+            # quantize epilogue: re-encode against the *output* params
+            # (qmetas row 2) so the next quantized matmul reads codes
+            o_ref[...] = encode_meta(acc, qmetas_ref[2, :])
+        else:
+            o_ref[...] = acc.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "decode_mode", "epilogue",
+                     "has_bias", "out_quant", "k_valid", "out_dtype",
+                     "interpret"),
+)
+def lut_dequant_matmul_dual_kernel(
+    x_codes: jax.Array,  # [M, K] uint8 activation codes
+    codes: jax.Array,    # [K, N] uint8 weight codes
+    luts: jax.Array,     # [3, 256] f32 (act table, weight table, out table)
+    qmetas: jax.Array,   # [3, 4] f32 (act, weight, out params)
+    bias: jax.Array,     # [N] f32 (ignored unless has_bias)
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    decode_mode: str = "gather",
+    epilogue: str | None = None,
+    has_bias: bool = False,
+    out_quant: bool = False,
+    k_valid: int | None = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """``decode_a(x_codes) @ decode_w(codes)`` with both decodes
+    in-kernel; ``out_quant`` re-encodes the flush through qmetas[2]
+    and emits uint8 codes (code-in/code-out)."""
+    m, k = x_codes.shape
+    k2, n = codes.shape
+    assert k == k2, (x_codes.shape, codes.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+    out_dt = jnp.uint8 if out_quant else out_dtype
+
+    return pl.pallas_call(
+        functools.partial(_dual_kernel, decode_mode=decode_mode,
+                          epilogue=epilogue, has_bias=has_bias,
+                          out_quant=out_quant, k_valid=k_valid, bk=bk,
+                          out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((3, 256), lambda i, j, kk: (0, 0)),   # resident LUTs
+            pl.BlockSpec((3, 4), lambda i, j, kk: (0, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dt),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_codes.astype(jnp.uint8), codes.astype(jnp.uint8),
+      luts.reshape(3, 256).astype(jnp.float32),
+      qmetas.reshape(3, 4).astype(jnp.float32),
+      bias.reshape(1, n).astype(jnp.float32))
+
+
+def _dual_gated_kernel(xc_ref, cg_ref, cu_ref, luts_ref, qmetas_ref, o_ref,
+                       accg_ref, accu_ref, *, decode_mode: str,
+                       activation: str, out_quant: bool,
+                       k_valid: int | None, bk: int, out_dtype):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    a = _decode_act_tile(luts_ref, qmetas_ref, xc_ref[...], 0,
+                         decode_mode, k_valid, bk)
+    if decode_mode == "gather":
+        wg = _decode_gather(luts_ref[1, :], cg_ref[...])
+        wu = _decode_gather(luts_ref[2, :], cu_ref[...])
+    else:
+        wg = _decode_alu(qmetas_ref[1, :], cg_ref[...])
+        wu = _decode_alu(qmetas_ref[2, :], cu_ref[...])
+    accg_ref[...] += jnp.dot(a, wg, preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(a, wu, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _flush():
+        out = apply_activation(accg_ref[...], activation) * accu_ref[...]
+        if out_quant:
+            o_ref[...] = encode_meta(out, qmetas_ref[3, :])
+        else:
+            o_ref[...] = out.astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bm", "bk", "bn", "decode_mode", "activation",
+                     "out_quant", "k_valid", "out_dtype", "interpret"),
+)
+def lut_dequant_matmul_dual_gated_kernel(
+    x_codes: jax.Array,   # [M, K] uint8 activation codes
+    codes_g: jax.Array,   # [K, N] uint8 (gate projection)
+    codes_u: jax.Array,   # [K, N] uint8 (up projection)
+    luts: jax.Array,      # [4, 256] (act, gate, up, out tables)
+    qmetas: jax.Array,    # [4, 4]
+    *,
+    bm: int = 128,
+    bk: int = 128,
+    bn: int = 128,
+    decode_mode: str = "gather",
+    activation: str = "silu",
+    out_quant: bool = False,
+    k_valid: int | None = None,
+    out_dtype=jnp.float32,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gated-MLP front half with an activation-code operand:
+    ``act(dec_a(x) @ dec(cg)) * (dec_a(x) @ dec(cu))`` — one shared act
+    decode feeds both matmuls; ``out_quant`` re-encodes the flush
+    (qmetas row 3) so the down projection reads codes."""
+    m, k = x_codes.shape
+    k2, n = codes_g.shape
+    assert k == k2 and codes_u.shape == codes_g.shape, (
+        x_codes.shape, codes_g.shape, codes_u.shape)
+    assert m % bm == 0 and k % bk == 0 and n % bn == 0, (m, k, n, bm, bk, bn)
+    grid = (m // bm, n // bn, k // bk)
+    out_dt = jnp.uint8 if out_quant else out_dtype
+
+    return pl.pallas_call(
+        functools.partial(_dual_gated_kernel, decode_mode=decode_mode,
+                          activation=activation, out_quant=out_quant,
+                          k_valid=k_valid, bk=bk, out_dtype=out_dtype),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((4, 256), lambda i, j, kk: (0, 0)),   # resident LUTs
+            pl.BlockSpec((4, 4), lambda i, j, kk: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dt),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(x_codes.astype(jnp.uint8), codes_g.astype(jnp.uint8),
+      codes_u.astype(jnp.uint8),
+      luts.reshape(4, 256).astype(jnp.float32),
+      qmetas.reshape(4, 4).astype(jnp.float32))

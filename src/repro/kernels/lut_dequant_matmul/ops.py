@@ -25,10 +25,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels.lut_dequant_matmul.lut_dequant_matmul import (
+    lut_dequant_matmul_dual_gated_kernel,
+    lut_dequant_matmul_dual_kernel,
     lut_dequant_matmul_gated_kernel,
     lut_dequant_matmul_kernel,
 )
 from repro.kernels.lut_dequant_matmul.ref import (
+    lut_dequant_matmul_dual_gated_ref,
+    lut_dequant_matmul_dual_ref,
     lut_dequant_matmul_gated_ref,
     lut_dequant_matmul_ref,
 )
@@ -38,7 +42,19 @@ from repro.kernels.lut_dequant_matmul.ref import (
 # land there).
 M_LADDER = (8, 16, 32, 64, 128, 256, 512)
 _VMEM_BUDGET = 8 * 1024 * 1024
-_TUNE_VERSION = 1
+# v2: keys gained the activation-operand representation component
+# (f32/bf16 activations vs uint8 act codes), so dual-LUT tiles can
+# never collide with fp-act tiles in a persisted cache.
+_TUNE_VERSION = 2
+
+# Activation-representation tag for uint8 DNA-TEQ act codes (fp
+# operands tag with their dtype name).
+ACT_CODE_REP = "u8code"
+
+
+def _xrep(x) -> str:
+    """The activation operand's representation, as a cache-key token."""
+    return ACT_CODE_REP if x.dtype == jnp.uint8 else str(x.dtype)
 
 
 def bucket_m(m: int) -> int:
@@ -103,9 +119,15 @@ class Autotuner:
 
     Disk format (JSON)::
 
-        {"version": 1,
-         "entries": {"<backend>|<kind>|<m>|<k>|<n>|<decode_mode>|<extra>":
-                     {"tile": [bm, bk, bn], "us": 123.4}}}
+        {"version": 2,
+         "entries":
+            {"<backend>|<kind>|<m>|<k>|<n>|<decode_mode>|<xrep>|<extra>":
+             {"tile": [bm, bk, bn], "us": 123.4}}}
+
+    ``xrep`` is the activation operand's representation (``float32`` /
+    ``bfloat16`` / ``u8code``): a dual-LUT call (codes activation) and a
+    fp-act call of the same geometry have different decode work per
+    tile, so their tiles must never share a cache entry.
     """
 
     def __init__(self, path: str | None = None):
@@ -202,7 +224,8 @@ def _bench_kernel(run, iters: int = 5) -> float:
 
 
 def _synth_operands(m_pad: int, k_pad: int, n_pad: int,
-                    transpose_codes: bool = False, gated: bool = False):
+                    transpose_codes: bool = False, gated: bool = False,
+                    act_codes: bool = False):
     """Concrete random operands of the padded shapes, for timing
     candidate tilings.  Every production call reaches this op under
     jit/vmap where the real operands are tracers — timing those would
@@ -212,7 +235,10 @@ def _synth_operands(m_pad: int, k_pad: int, n_pad: int,
     when invoked from inside a trace; the persistent cache makes it a
     once-per-shape compile-time cost."""
     r = np.random.default_rng(0)
-    x = jnp.asarray(r.normal(size=(m_pad, k_pad)), jnp.float32)
+    if act_codes:
+        x = jnp.asarray(r.integers(0, 256, (m_pad, k_pad)), jnp.uint8)
+    else:
+        x = jnp.asarray(r.normal(size=(m_pad, k_pad)), jnp.float32)
     cshape = (n_pad, k_pad) if transpose_codes else (k_pad, n_pad)
     codes = jnp.asarray(r.integers(0, 256, cshape), jnp.uint8)
     lut = jnp.asarray(r.normal(size=(256,)) * 0.05, jnp.float32)
@@ -224,14 +250,20 @@ def _synth_operands(m_pad: int, k_pad: int, n_pad: int,
     return x, codes, lut, qmeta, bias
 
 
+def _tune_key(kind: str, m_pad: int, k_pad: int, n_pad: int,
+              decode_mode: str, xrep: str, extra: str) -> str:
+    return "|".join([jax.default_backend(), kind, str(m_pad), str(k_pad),
+                     str(n_pad), decode_mode, xrep, extra])
+
+
 def _tiling_for(kind: str, m_pad: int, k_pad: int, n_pad: int,
-                decode_mode: str, extra: str, interpret: bool,
+                decode_mode: str, xrep: str, extra: str, interpret: bool,
                 autotune: bool | None, bench_factory=None):
     if not _autotune_enabled(autotune, interpret):
         return _default_tiling(m_pad, k_pad, n_pad)
-    key = "|".join([jax.default_backend(), kind, str(m_pad), str(k_pad),
-                    str(n_pad), decode_mode, extra])
-    cands = _candidate_tilings(m_pad, k_pad, n_pad, dual=(kind == "gated"))
+    key = _tune_key(kind, m_pad, k_pad, n_pad, decode_mode, xrep, extra)
+    cands = _candidate_tilings(
+        m_pad, k_pad, n_pad, dual=kind in ("gated", "dual_gated"))
     return _TUNER.get(key, cands, bench_factory(cands))
 
 
@@ -288,7 +320,7 @@ def lut_dequant_matmul(
         return bench
 
     bm, bk, bn = _tiling_for(
-        "mm", m_pad, k_pad, n_pad, decode_mode,
+        "mm", m_pad, k_pad, n_pad, decode_mode, _xrep(x),
         f"{epilogue}|{int(has_bias)}|{int(transpose_codes)}",
         interpret, autotune, bench_factory)
     out = lut_dequant_matmul_kernel(
@@ -350,7 +382,7 @@ def lut_dequant_matmul_gated(
         return bench
 
     bm, bk, bn = _tiling_for(
-        "gated", m_pad, k_pad, n_pad, decode_mode, activation,
+        "gated", m_pad, k_pad, n_pad, decode_mode, _xrep(x), activation,
         interpret, autotune, bench_factory)
     out = lut_dequant_matmul_gated_kernel(
         xk, cg, cu, luts, qmetas, bm=bm, bk=bk, bn=bn,
@@ -359,6 +391,156 @@ def lut_dequant_matmul_gated(
     return out[:m, :n].astype(out_dtype)
 
 
+def _qmeta_or_zeros(qmeta) -> jax.Array:
+    if qmeta is None:
+        return jnp.zeros((4,), jnp.float32)
+    return qmeta.astype(jnp.float32)
+
+
+def lut_dequant_matmul_dual(
+    x_codes: jax.Array,    # [M, K] uint8 activation codes
+    codes: jax.Array,      # [K, N] uint8 weight codes
+    lut_x: jax.Array,      # [256] activation decode table
+    lut_w: jax.Array,      # [256] weight decode table
+    qmeta_x: jax.Array | None = None,
+    qmeta_w: jax.Array | None = None,
+    *,
+    epilogue: str | None = None,
+    bias: jax.Array | None = None,
+    out_qmeta: jax.Array | None = None,
+    decode_mode: str = "gather",
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+    autotune: bool | None = None,
+) -> jax.Array:
+    """Dual-operand fused matmul: BOTH operands cross HBM as uint8
+    DNA-TEQ codes, each decoding through its own VMEM-resident table
+    inside the kernel.  ``out_qmeta`` turns on the quantize epilogue:
+    the flushed tile is re-encoded against those (calibrated) output
+    params and the call returns uint8 codes — consecutive quantized
+    matmuls stay code-in/code-out with no f32 intermediate in HBM.
+
+    K is padded to 128 lanes; because a zero pad *byte* is a live code
+    (it decodes to ±(alpha·base^e_min + beta)), the kernel masks the
+    decoded activation tile against the true contraction length."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, k = x_codes.shape
+    n = codes.shape[1]
+    m_pad = bucket_m(m)
+    xk = _pad_to(_pad_axis_to(x_codes, m_pad, 0), 128, 1)
+    ck = _pad_to(_pad_to(codes, 128, 0), 128, 1)
+    k_pad, n_pad = ck.shape
+    k_valid = k if k_pad != k else None
+    out_quant = out_qmeta is not None
+    luts = jnp.stack([lut_x.astype(jnp.float32),
+                      lut_w.astype(jnp.float32),
+                      jnp.zeros((256,), jnp.float32)])
+    qmetas = jnp.stack([_qmeta_or_zeros(qmeta_x), _qmeta_or_zeros(qmeta_w),
+                        _qmeta_or_zeros(out_qmeta)])
+    has_bias = bias is not None
+    bias_arr = (_pad_axis_to(bias.astype(jnp.float32), n_pad, 0)
+                if has_bias else jnp.zeros((n_pad,), jnp.float32))
+
+    def bench_factory(_cands):
+        sx, sc, slut, sqm, sb = _synth_operands(
+            m_pad, k_pad, n_pad, act_codes=True)
+        sluts = jnp.stack([slut, slut, slut])
+        sqms = jnp.stack([sqm, sqm, sqm])
+
+        def bench(tile):
+            bm, bk, bn = tile
+            return _bench_kernel(lambda: lut_dequant_matmul_dual_kernel(
+                sx, sc, sluts, sqms, sb, bm=bm, bk=bk, bn=bn,
+                decode_mode=decode_mode, epilogue=epilogue,
+                has_bias=has_bias, out_quant=out_quant, k_valid=k_valid,
+                out_dtype=jnp.float32, interpret=interpret))
+        return bench
+
+    bm, bk, bn = _tiling_for(
+        "dual", m_pad, k_pad, n_pad, decode_mode, _xrep(x_codes),
+        f"{epilogue}|{int(has_bias)}|{int(out_quant)}",
+        interpret, autotune, bench_factory)
+    out = lut_dequant_matmul_dual_kernel(
+        xk, ck, luts, qmetas, bias_arr, bm=bm, bk=bk, bn=bn,
+        decode_mode=decode_mode, epilogue=epilogue, has_bias=has_bias,
+        out_quant=out_quant, k_valid=k_valid, out_dtype=jnp.float32,
+        interpret=interpret)
+    out = out[:m, :n]
+    return out if out_quant else out.astype(out_dtype)
+
+
+def lut_dequant_matmul_dual_gated(
+    x_codes: jax.Array,    # [M, K] uint8 activation codes
+    codes_g: jax.Array,    # [K, N] uint8 (gate)
+    codes_u: jax.Array,    # [K, N] uint8 (up)
+    lut_x: jax.Array,
+    lut_g: jax.Array,
+    lut_u: jax.Array,
+    qmeta_x: jax.Array | None = None,
+    qmeta_g: jax.Array | None = None,
+    qmeta_u: jax.Array | None = None,
+    *,
+    activation: str = "silu",
+    out_qmeta: jax.Array | None = None,
+    decode_mode: str = "gather",
+    out_dtype=jnp.float32,
+    interpret: bool | None = None,
+    autotune: bool | None = None,
+) -> jax.Array:
+    """Gated-MLP front half on an activation-code operand: one shared
+    in-kernel act decode feeds both matmuls, and ``out_qmeta``
+    re-encodes the gated flush so the down projection reads codes."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, k = x_codes.shape
+    n = codes_g.shape[1]
+    m_pad = bucket_m(m)
+    xk = _pad_to(_pad_axis_to(x_codes, m_pad, 0), 128, 1)
+    cg = _pad_to(_pad_to(codes_g, 128, 0), 128, 1)
+    cu = _pad_to(_pad_to(codes_u, 128, 0), 128, 1)
+    k_pad, n_pad = cg.shape
+    k_valid = k if k_pad != k else None
+    out_quant = out_qmeta is not None
+    luts = jnp.stack([lut_x.astype(jnp.float32),
+                      lut_g.astype(jnp.float32),
+                      lut_u.astype(jnp.float32),
+                      jnp.zeros((256,), jnp.float32)])
+    qmetas = jnp.stack([_qmeta_or_zeros(qmeta_x), _qmeta_or_zeros(qmeta_g),
+                        _qmeta_or_zeros(qmeta_u),
+                        _qmeta_or_zeros(out_qmeta)])
+
+    def bench_factory(_cands):
+        sx, scg, scu, slut, sqm, _sb = _synth_operands(
+            m_pad, k_pad, n_pad, gated=True, act_codes=True)
+        sluts = jnp.stack([slut] * 4)
+        sqms = jnp.stack([sqm] * 4)
+
+        def bench(tile):
+            bm, bk, bn = tile
+            return _bench_kernel(
+                lambda: lut_dequant_matmul_dual_gated_kernel(
+                    sx, scg, scu, sluts, sqms, bm=bm, bk=bk, bn=bn,
+                    decode_mode=decode_mode, activation=activation,
+                    out_quant=out_quant, k_valid=k_valid,
+                    out_dtype=jnp.float32, interpret=interpret))
+        return bench
+
+    bm, bk, bn = _tiling_for(
+        "dual_gated", m_pad, k_pad, n_pad, decode_mode, _xrep(x_codes),
+        f"{activation}|{int(out_quant)}", interpret, autotune,
+        bench_factory)
+    out = lut_dequant_matmul_dual_gated_kernel(
+        xk, cg, cu, luts, qmetas, bm=bm, bk=bk, bn=bn,
+        decode_mode=decode_mode, activation=activation,
+        out_quant=out_quant, k_valid=k_valid, out_dtype=jnp.float32,
+        interpret=interpret)
+    out = out[:m, :n]
+    return out if out_quant else out.astype(out_dtype)
+
+
 __all__ = ["lut_dequant_matmul", "lut_dequant_matmul_gated",
+           "lut_dequant_matmul_dual", "lut_dequant_matmul_dual_gated",
            "lut_dequant_matmul_ref", "lut_dequant_matmul_gated_ref",
-           "bucket_m", "Autotuner", "M_LADDER"]
+           "lut_dequant_matmul_dual_ref", "lut_dequant_matmul_dual_gated_ref",
+           "bucket_m", "Autotuner", "M_LADDER", "ACT_CODE_REP"]

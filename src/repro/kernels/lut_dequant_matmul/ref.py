@@ -30,3 +30,46 @@ def lut_dequant_matmul_gated_ref(
     g = lut_dequant_matmul_ref(x, codes_g, lut_g)
     u = lut_dequant_matmul_ref(x, codes_u, lut_u)
     return (_act(g, activation) * u).astype(out_dtype)
+
+
+def _decode(codes: jax.Array, lut: jax.Array) -> jax.Array:
+    return lut.astype(jnp.float32)[codes.astype(jnp.int32)]
+
+
+def lut_dequant_matmul_dual_ref(
+    x_codes: jax.Array, codes: jax.Array,
+    lut_x: jax.Array, lut_w: jax.Array,
+    out_qmeta: jax.Array | None = None,
+    out_dtype=jnp.float32, epilogue: str | None = None, bias=None,
+) -> jax.Array:
+    """Decode-then-matmul oracle of the dual kernel: both operands
+    through their tables, one matmul, optional quantize epilogue."""
+    from repro.core import exponential_quant as eq
+
+    out = jnp.matmul(_decode(x_codes, lut_x), _decode(codes, lut_w),
+                     preferred_element_type=jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)[None, :]
+    out = _act(out, epilogue)
+    if out_qmeta is not None:
+        return eq.encode_meta(out, out_qmeta)
+    return out.astype(out_dtype)
+
+
+def lut_dequant_matmul_dual_gated_ref(
+    x_codes: jax.Array, codes_g: jax.Array, codes_u: jax.Array,
+    lut_x: jax.Array, lut_g: jax.Array, lut_u: jax.Array,
+    activation: str = "silu", out_qmeta: jax.Array | None = None,
+    out_dtype=jnp.float32,
+) -> jax.Array:
+    from repro.core import exponential_quant as eq
+
+    a = _decode(x_codes, lut_x)
+    g = jnp.matmul(a, _decode(codes_g, lut_g),
+                   preferred_element_type=jnp.float32)
+    u = jnp.matmul(a, _decode(codes_u, lut_u),
+                   preferred_element_type=jnp.float32)
+    out = _act(g, activation) * u
+    if out_qmeta is not None:
+        return eq.encode_meta(out, out_qmeta)
+    return out.astype(out_dtype)

@@ -27,7 +27,13 @@ def main():
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--new-tokens", type=int, default=16)
     ap.add_argument("--quant", type=int, default=None,
-                    help="DNA-TEQ exponent bits (e.g. 7)")
+                    help="DNA-TEQ exponent bits for weights (e.g. 7)")
+    ap.add_argument("--act-quant", type=int, default=None,
+                    help="DNA-TEQ exponent bits for ACTIVATIONS: fits "
+                         "per-(layer, site) params on sample prompts at "
+                         "startup (disk-cached) and serves act tensors "
+                         "as uint8 codes through the dual-LUT kernel "
+                         "(engine path only)")
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--slots", type=int, default=8,
                     help="concurrent decode slots")
@@ -61,6 +67,9 @@ def main():
     ]
 
     if args.bucketed:
+        if args.act_quant is not None:
+            print("note: --act-quant applies to the engine path only; "
+                  "the bucketed baseline stays fp-act")
         server = InferenceServer(cfg, quant_bits=args.quant,
                                  max_len=max(args.max_len,
                                              args.shared_prefix
@@ -74,7 +83,8 @@ def main():
         label = "bucketed (legacy contiguous cache)"
     else:
         eng = Engine(
-            cfg, quant_bits=args.quant, kv_dtype=args.kv_dtype,
+            cfg, quant_bits=args.quant, act_quant=args.act_quant,
+            kv_dtype=args.kv_dtype,
             engine=EngineConfig(num_slots=args.slots,
                                 block_size=args.block_size,
                                 max_seq_len=max(args.max_len,
@@ -100,7 +110,14 @@ def main():
               f"max {max(c.ttft_s for c in outs)*1e3:.1f} ms; queue wait "
               f"mean {st.mean(c.queue_wait_s for c in outs)*1e3:.1f} ms "
               f"({eng.prefill_batches} chunked prefill dispatches, "
-              f"{eng.admission_reorders} prefix-aware reorders)")
+              f"{eng.admission_reorders} prefix-aware reorders, "
+              f"{eng.trie_match_reuses} trie-match reuses)")
+    if not args.bucketed and eng.act_report is not None:
+        import statistics as st
+        sq = [s for v in eng.act_report.values() for s in v]
+        print(f"act-quant: {len(sq)} (layer, site) tensors calibrated, "
+              f"mean SQNR {st.mean(sq):.1f} dB "
+              f"(sites: {', '.join(sorted(eng.act_report))})")
     if not args.bucketed and eng.prefix_stats is not None:
         ps = eng.prefix_stats
         print(f"prefix cache: {ps.hits}/{ps.queries} hits, "

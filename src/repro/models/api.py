@@ -40,6 +40,11 @@ class ModelAPI:
     # positions straight from the pages via the chunked flash kernel.
     prefill_into_cache: Callable | None = None
     decode_step_paged: Callable | None = None
+    # DNA-TEQ activation-quantization calibration hook: one forward
+    # over sample prompts returning per-(layer, site) float activation
+    # samples for the runtime to fit ExpQuantParams on (None for
+    # families without the act-quant path).
+    collect_act_calibration: Callable | None = None
 
     def init(self, rng, dtype=None):
         dtype = dtype or jnp.dtype(self.cfg.param_dtype)
@@ -81,6 +86,8 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         abstract_cache=mod.abstract_cache,
         prefill_into_cache=getattr(mod, "prefill_into_cache", None),
         decode_step_paged=getattr(mod, "decode_step_paged", None),
+        collect_act_calibration=getattr(mod, "collect_act_calibration",
+                                        None),
     )
 
 

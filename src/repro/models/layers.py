@@ -108,6 +108,32 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
     return out.astype(x.dtype)
 
 
+# ------------------------------------------------- act quantization --
+#
+# DNA-TEQ activation quantization (paper §II-C): per-(layer, site)
+# calibrated ExpQuantParams ride the params tree as
+# ``params["blocks"]["act_q"][site] = {"lut": [L,256], "qmeta": [L,4]}``
+# so lax.scan slices one site table per layer.  A site marks the float
+# tensor feeding a quantized matmul; encoding there turns the matmul
+# dual-operand (both sides uint8 codes, dual-LUT kernel), and the
+# mlp_mid site is produced *in-kernel* by the quantize epilogue.
+
+ACT_SITES = ("attn_in", "attn_out", "mlp_in", "mlp_mid")
+
+
+def _q(x, act_q, site: str):
+    """Encode ``x`` at an act-quant site (no-op without params)."""
+    return ll.maybe_encode_act(x, act_q, site)
+
+
+def _mid_q(act_q):
+    """The mlp_mid site entry when both present and policy-enabled —
+    handed to the kernel quantize epilogue as ``out_quant``."""
+    if act_q is None or not ll.get_policy().act_quant:
+        return None
+    return act_q.get("mlp_mid")
+
+
 # --------------------------------------------------------- attention --
 
 def attention_specs(cfg: ModelConfig) -> dict:
@@ -307,16 +333,22 @@ def mha(
     kv: tuple[jax.Array, jax.Array] | None = None,   # external K,V ([B,T,nkv,hd])
     use_rope: bool = True,
     q_offset=0,
-) -> jax.Array:
+    act_q: dict | None = None,
+    return_ctx: bool = False,
+):
     """Grouped-query attention; ``kv`` overrides self-derived keys/values
     (decode-with-cache and cross-attention paths).  ``mask`` is either a
     small bool array (decode) or a (kind, arg) descriptor — descriptors
-    route large shapes through the flash path."""
+    route large shapes through the flash path.  ``act_q`` encodes the
+    attn_in/attn_out activations as DNA-TEQ codes so the q/k/v/o
+    projections run dual-LUT; ``return_ctx`` additionally returns the
+    pre-``wo`` context (the attn_out calibration sample)."""
     dt = x.dtype
-    q = ll.dense_general(x, p["wq"], "bsd,dnh->bsnh")
+    xq = _q(x, act_q, "attn_in")      # encoded ONCE, feeds q, k and v
+    q = ll.dense_general(xq, p["wq"], "bsd,dnh->bsnh", dtype=dt)
     if kv is None:
-        k = ll.dense_general(x, p["wk"], "bsd,dnh->bsnh")
-        v = ll.dense_general(x, p["wv"], "bsd,dnh->bsnh")
+        k = ll.dense_general(xq, p["wk"], "bsd,dnh->bsnh", dtype=dt)
+        v = ll.dense_general(xq, p["wv"], "bsd,dnh->bsnh", dtype=dt)
     else:
         k, v = kv
     if cfg.qk_norm:
@@ -344,7 +376,11 @@ def mha(
     else:
         out = _attend_dense(qg, k, v, mask, dt)
     out = out.reshape(b, s, h, hd)
-    return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
+    proj = ll.dense_general(_q(out, act_q, "attn_out"), p["wo"],
+                            "bsnh,nhd->bsd", dtype=dt)
+    if return_ctx:
+        return proj, out
+    return proj
 
 
 def mha_decode(
@@ -356,6 +392,7 @@ def mha_decode(
     v_cache: jax.Array,
     lengths: jax.Array,                # [B] valid cache entries
     use_rope: bool = True,
+    act_q: dict | None = None,
 ) -> jax.Array:
     """Decode-step GQA through the flash-decoding kernel: the cache is
     streamed block-wise with in-kernel dequantization (narrow KV bytes
@@ -364,7 +401,8 @@ def mha_decode(
     from repro.kernels.decode_gqa import decode_gqa
 
     dt = x.dtype
-    q = ll.dense_general(x, p["wq"], "bsd,dnh->bsnh")
+    q = ll.dense_general(_q(x, act_q, "attn_in"), p["wq"],
+                         "bsd,dnh->bsnh", dtype=dt)
     if cfg.qk_norm:
         q = apply_head_rms(p["q_norm"], q)
     if use_rope:
@@ -374,7 +412,8 @@ def mha_decode(
     qg = q[:, 0].reshape(b, cfg.num_kv_heads, groups, hd)
     out = decode_gqa(qg, k_cache, v_cache, lengths)
     out = out.reshape(b, 1, h, hd).astype(dt)
-    return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
+    return ll.dense_general(_q(out, act_q, "attn_out"), p["wo"],
+                            "bsnh,nhd->bsd", dtype=dt)
 
 
 def mha_decode_paged(
@@ -387,6 +426,7 @@ def mha_decode_paged(
     block_tables: jax.Array,           # [B, max_blk] int32
     lengths: jax.Array,                # [B] valid cache entries
     use_rope: bool = True,
+    act_q: dict | None = None,
 ) -> jax.Array:
     """Decode-step GQA over a *paged* cache: the block table rides as a
     scalar-prefetch operand so each page's HBM→VMEM DMA is issued
@@ -396,7 +436,8 @@ def mha_decode_paged(
     from repro.kernels.decode_gqa import decode_gqa_paged, decode_gqa_paged_ref
 
     dt = x.dtype
-    q = ll.dense_general(x, p["wq"], "bsd,dnh->bsnh")
+    q = ll.dense_general(_q(x, act_q, "attn_in"), p["wq"],
+                         "bsd,dnh->bsnh", dtype=dt)
     if cfg.qk_norm:
         q = apply_head_rms(p["q_norm"], q)
     if use_rope:
@@ -415,7 +456,8 @@ def mha_decode_paged(
         out = jnp.where((lengths > 0)[:, None, None, None], out,
                         jnp.zeros((), out.dtype))
     out = out.reshape(b, 1, h, hd).astype(dt)
-    return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
+    return ll.dense_general(_q(out, act_q, "attn_out"), p["wo"],
+                            "bsnh,nhd->bsd", dtype=dt)
 
 
 def mha_prefill_paged(
@@ -429,6 +471,7 @@ def mha_prefill_paged(
     q_start: jax.Array,                # [B] absolute position of row 0
     kv_lens: jax.Array,                # [B] cache positions written
     use_rope: bool = True,
+    act_q: dict | None = None,
 ) -> jax.Array:
     """Chunked-prefill GQA straight from the paged KV cache: the chunk's
     queries (roped at their absolute positions) attend every written
@@ -442,7 +485,8 @@ def mha_prefill_paged(
     from repro.kernels.flash_prefill import flash_prefill_paged
 
     dt = x.dtype
-    q = ll.dense_general(x, p["wq"], "bsd,dnh->bsnh")
+    q = ll.dense_general(_q(x, act_q, "attn_in"), p["wq"],
+                         "bsd,dnh->bsnh", dtype=dt)
     if cfg.qk_norm:
         q = apply_head_rms(p["q_norm"], q)
     if use_rope:
@@ -453,14 +497,18 @@ def mha_prefill_paged(
     out = flash_prefill_paged(qg, k_pages, v_pages, block_tables,
                               q_start, kv_lens)
     out = out.reshape(b, s, h, hd).astype(dt)
-    return ll.dense_general(out, p["wo"], "bsnh,nhd->bsd")
+    return ll.dense_general(_q(out, act_q, "attn_out"), p["wo"],
+                            "bsnh,nhd->bsd", dtype=dt)
 
 
 def self_kv(p: Params, x: jax.Array, cfg: ModelConfig,
-            positions: jax.Array, use_rope: bool = True):
+            positions: jax.Array, use_rope: bool = True,
+            act_q: dict | None = None):
     """Project K,V for cache writes (decode path)."""
-    k = ll.dense_general(x, p["wk"], "bsd,dnh->bsnh")
-    v = ll.dense_general(x, p["wv"], "bsd,dnh->bsnh")
+    dt = x.dtype
+    xq = _q(x, act_q, "attn_in")
+    k = ll.dense_general(xq, p["wk"], "bsd,dnh->bsnh", dtype=dt)
+    v = ll.dense_general(xq, p["wv"], "bsd,dnh->bsnh", dtype=dt)
     if cfg.qk_norm:
         k = apply_head_rms(p["k_norm"], k)
     if use_rope:
@@ -481,16 +529,31 @@ def mlp_specs(cfg: ModelConfig, d_ff: int | None = None) -> dict:
     return s
 
 
-def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+def apply_mlp(p: Params, x: jax.Array, cfg: ModelConfig,
+              act_q: dict | None = None, return_mid: bool = False):
+    """MLP block.  With ``act_q``, the chain is code-in/code-out: the
+    mlp_in site encodes x once, the front half runs dual-LUT and its
+    quantize epilogue re-encodes the intermediate *in-kernel* (the
+    mlp_mid codes are the only HBM form of it), and the down projection
+    consumes those codes through the dual kernel.  ``return_mid``
+    additionally returns the float intermediate (mlp_mid calibration
+    sample; calibration runs without act_q, so mid is a float there)."""
+    dt = x.dtype
+    xq = _q(x, act_q, "mlp_in")
     if cfg.gated_mlp:
         # Quantized weights: ONE fused dual-matmul kernel computes
         # act(x@w_gate)*(x@w_up) (gate intermediate never reaches HBM),
         # then the down projection is a second fused call — the MLP
         # chain is 2 kernel flushes instead of 3 HBM round-trips.
-        h = ll.gated_mlp(x, p["w_gate"], p["w_up"], cfg.activation)
-        return ll.dense(h, p["w_down"])
-    return ll.dense(ll.dense(x, p["w_up"], epilogue=cfg.activation),
-                    p["w_down"])
+        h = ll.gated_mlp(xq, p["w_gate"], p["w_up"], cfg.activation,
+                         dtype=dt, out_quant=_mid_q(act_q))
+    else:
+        h = ll.dense(xq, p["w_up"], epilogue=cfg.activation, dtype=dt,
+                     out_quant=_mid_q(act_q))
+    out = ll.dense(h, p["w_down"], dtype=dt)
+    if return_mid:
+        return out, h
+    return out
 
 
 # -------------------------------------------------------- embeddings --

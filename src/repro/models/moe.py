@@ -54,15 +54,23 @@ def _router(p, xf: jax.Array, cfg: ModelConfig):
     return probs, top_w, top_e, aux
 
 
-def _expert_ffn(p, buf: jax.Array, cfg: ModelConfig) -> jax.Array:
+def _expert_ffn(p, buf: jax.Array, cfg: ModelConfig,
+                act_q: dict | None = None) -> jax.Array:
     """buf: [E, C, D] -> [E, C, D] through each expert's gated MLP.
 
     Grouped einsums go through ``dense_general``, which canonicalizes
     the per-expert batch dim and vmaps the fused dequant-matmul kernel —
-    quantized expert weights never materialize in HBM."""
+    quantized expert weights never materialize in HBM.  With ``act_q``
+    the dispatched buffer is encoded once at the mlp_in site (the
+    capacity buffer crosses HBM as uint8 codes into the vmapped
+    dual-LUT kernels); the expert *intermediate* stays fp — per-expert
+    mid calibration is an open follow-up (DESIGN.md)."""
     act = jax.nn.silu if cfg.activation == "silu" else jax.nn.gelu
-    g = ll.dense_general(buf, p["w_gate"], "ecd,edf->ecf", dtype=jnp.float32)
-    u = ll.dense_general(buf, p["w_up"], "ecd,edf->ecf", dtype=jnp.float32)
+    bufq = ll.maybe_encode_act(buf, act_q, "mlp_in")
+    g = ll.dense_general(bufq, p["w_gate"], "ecd,edf->ecf",
+                         dtype=jnp.float32)
+    u = ll.dense_general(bufq, p["w_up"], "ecd,edf->ecf",
+                         dtype=jnp.float32)
     h = (act(g) * u).astype(buf.dtype)
     return ll.dense_general(h, p["w_down"], "ecf,efd->ecd",
                             dtype=jnp.float32).astype(buf.dtype)
@@ -97,7 +105,8 @@ def _constrain(x, *spec):
         return x
 
 
-def apply_moe_routed(p, x: jax.Array, cfg: ModelConfig):
+def apply_moe_routed(p, x: jax.Array, cfg: ModelConfig,
+                     act_q: dict | None = None):
     """Sort-based capacity-dropped dispatch.  x: [B, S, D].
 
     §Perf C1 (EXPERIMENTS.md): dispatch buffers carry explicit sharding
@@ -131,7 +140,8 @@ def apply_moe_routed(p, x: jax.Array, cfg: ModelConfig):
     buf = jnp.zeros((e * cap + 1, d), x.dtype).at[dest].set(xf[src_tok])
     buf = _constrain(buf[: e * cap].reshape(e, cap, d),
                      "model", "fsdp", None)
-    out_buf = _constrain(_expert_ffn(p, buf, cfg), "model", "fsdp", None)
+    out_buf = _constrain(_expert_ffn(p, buf, cfg, act_q=act_q),
+                         "model", "fsdp", None)
     out_flat = jnp.concatenate(
         [out_buf.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)], axis=0)
 
@@ -158,14 +168,18 @@ def _expert_leaf(w, sl):
     return sl
 
 
-def apply_moe_dense(p, x: jax.Array, cfg: ModelConfig):
+def apply_moe_dense(p, x: jax.Array, cfg: ModelConfig,
+                    act_q: dict | None = None):
     """Oracle/baseline: all experts compute all tokens (scan over E).
     Quantized expert weights ride through the scan as uint8 code slabs
-    and dispatch to the fused (gated) kernel per expert."""
+    and dispatch to the fused (gated) kernel per expert.  With
+    ``act_q`` the token buffer is encoded ONCE at the mlp_in site and
+    the per-expert gated kernels read the same act codes."""
     b, s, d = x.shape
     t = b * s
     xf = x.reshape(t, d)
     probs, top_w, top_e, aux = _router(p, xf, cfg)
+    xq = ll.maybe_encode_act(xf, act_q, "mlp_in")
     # sparse mixture weights [T, E] (zeros off the top-k support)
     w = jnp.zeros_like(probs).at[
         jnp.arange(t)[:, None], top_e
@@ -176,7 +190,7 @@ def apply_moe_dense(p, x: jax.Array, cfg: ModelConfig):
         g_leaf = _expert_leaf(p["w_gate"], wg)
         u_leaf = _expert_leaf(p["w_up"], wu)
         d_leaf = _expert_leaf(p["w_down"], wd)
-        h = ll.gated_mlp(xf, g_leaf, u_leaf, cfg.activation,
+        h = ll.gated_mlp(xq, g_leaf, u_leaf, cfg.activation,
                          dtype=xf.dtype)
         y = ll.dense(h, d_leaf, dtype=xf.dtype)
         return carry + y * we[:, None].astype(xf.dtype), None
@@ -191,10 +205,13 @@ def apply_moe_dense(p, x: jax.Array, cfg: ModelConfig):
     return y.reshape(b, s, d), aux
 
 
-def apply_moe(p, x: jax.Array, cfg: ModelConfig):
+def apply_moe(p, x: jax.Array, cfg: ModelConfig,
+              act_q: dict | None = None):
     if cfg.moe_impl == "ep_a2a":
         from repro.models.moe_ep import apply_moe_ep
+        # EP's shard_map body manages its own dispatch buffers; act
+        # codes stop at its boundary (follow-up in DESIGN.md)
         return apply_moe_ep(p, x, cfg)
     if cfg.moe_impl == "routed":
-        return apply_moe_routed(p, x, cfg)
-    return apply_moe_dense(p, x, cfg)
+        return apply_moe_routed(p, x, cfg, act_q=act_q)
+    return apply_moe_dense(p, x, cfg, act_q=act_q)

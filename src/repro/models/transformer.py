@@ -70,16 +70,23 @@ def _block(p, x, cfg: ModelConfig, positions, mask, kv=None):
     """One transformer block; returns (y, aux_loss, new_kv).
 
     ``kv`` merges this step's K,V into the cache view handed to
-    attention (decode-with-cache); None lets mha derive K,V itself."""
+    attention (decode-with-cache); None lets mha derive K,V itself.
+    When the block params carry calibrated ``act_q`` tables (DNA-TEQ
+    activation quantization), the matmul inputs are encoded at their
+    sites and dispatch dual-LUT — the residual stream stays float (the
+    norms need it), everything feeding a quantized matmul crosses HBM
+    as uint8 codes."""
+    aq = p.get("act_q")
     h = L.apply_norm(p["ln1"], x, cfg)
-    new_kv = L.self_kv(p["attn"], h, cfg, positions)
-    attn = L.mha(p["attn"], h, cfg, positions, mask, kv=kv)
+    new_kv = L.self_kv(p["attn"], h, cfg, positions, act_q=aq)
+    attn = L.mha(p["attn"], h, cfg, positions, mask, kv=kv, act_q=aq)
     x = x + attn
     h = L.apply_norm(p["ln2"], x, cfg)
     if cfg.is_moe:
-        y, aux = M.apply_moe(p["moe"], h, cfg)
+        y, aux = M.apply_moe(p["moe"], h, cfg, act_q=aq)
     else:
-        y, aux = L.apply_mlp(p["mlp"], h, cfg), jnp.zeros((), jnp.float32)
+        y, aux = (L.apply_mlp(p["mlp"], h, cfg, act_q=aq),
+                  jnp.zeros((), jnp.float32))
     return x + y, aux, new_kv
 
 
@@ -174,25 +181,27 @@ def decode_step(params, cache, tokens: jax.Array, cfg: ModelConfig):
     def body(carry, layer_in):
         x, = carry
         blk_params, k_cache, v_cache = layer_in
+        aq = blk_params.get("act_q")
         h = L.apply_norm(blk_params["ln1"], x, cfg)
-        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions)
+        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions,
+                                 act_q=aq)
         k_cache = jax.lax.dynamic_update_slice_in_dim(
             k_cache, k_new.astype(k_cache.dtype), pos, axis=1)
         v_cache = jax.lax.dynamic_update_slice_in_dim(
             v_cache, v_new.astype(v_cache.dtype), pos, axis=1)
         if flash:
             attn = L.mha_decode(blk_params["attn"], h, cfg, positions,
-                                k_cache, v_cache, lengths)
+                                k_cache, v_cache, lengths, act_q=aq)
         else:
             attn = L.mha(blk_params["attn"], h, cfg, positions, mask,
                          kv=(k_cache.astype(x.dtype),
-                             v_cache.astype(x.dtype)))
+                             v_cache.astype(x.dtype)), act_q=aq)
         x = x + attn
         h = L.apply_norm(blk_params["ln2"], x, cfg)
         if cfg.is_moe:
-            y, _ = M.apply_moe(blk_params["moe"], h, cfg)
+            y, _ = M.apply_moe(blk_params["moe"], h, cfg, act_q=aq)
         else:
-            y = L.apply_mlp(blk_params["mlp"], h, cfg)
+            y = L.apply_mlp(blk_params["mlp"], h, cfg, act_q=aq)
         return (L.constrain_act(x + y),), (k_cache, v_cache)
 
     (x,), (ks, vs) = scan_blocks(
@@ -286,22 +295,25 @@ def prefill_into_cache(
     def body(carry, layer_in):
         x, aux = carry
         blk_params, k_pages_l, v_pages_l = layer_in
+        aq = blk_params.get("act_q")
         h = L.apply_norm(blk_params["ln1"], x, cfg)
-        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions)
+        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions,
+                                 act_q=aq)
         k_pages_l = k_pages_l.at[page, off].set(
             k_new.astype(k_pages_l.dtype))
         v_pages_l = v_pages_l.at[page, off].set(
             v_new.astype(v_pages_l.dtype))
         attn = L.mha_prefill_paged(blk_params["attn"], h, cfg, positions,
                                    k_pages_l, v_pages_l,
-                                   view.block_tables, start, kv_lens)
+                                   view.block_tables, start, kv_lens,
+                                   act_q=aq)
         x = x + attn
         h = L.apply_norm(blk_params["ln2"], x, cfg)
         if cfg.is_moe:
-            y, a = M.apply_moe(blk_params["moe"], h, cfg)
+            y, a = M.apply_moe(blk_params["moe"], h, cfg, act_q=aq)
         else:
-            y, a = L.apply_mlp(blk_params["mlp"], h, cfg), jnp.zeros(
-                (), jnp.float32)
+            y, a = (L.apply_mlp(blk_params["mlp"], h, cfg, act_q=aq),
+                    jnp.zeros((), jnp.float32))
         return (L.constrain_act(x + y), aux + a), (k_pages_l, v_pages_l)
 
     (x, _aux), (ks, vs) = scan_blocks(
@@ -344,19 +356,21 @@ def decode_step_paged(params, view, tokens: jax.Array, active: jax.Array,
     def body(carry, layer_in):
         x, = carry
         blk_params, k_pages_l, v_pages_l = layer_in
+        aq = blk_params.get("act_q")
         h = L.apply_norm(blk_params["ln1"], x, cfg)
-        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions)
+        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions,
+                                 act_q=aq)
         k_pages_l = _scatter_token_kv(k_pages_l, k_new[:, 0], blk_idx, off)
         v_pages_l = _scatter_token_kv(v_pages_l, v_new[:, 0], blk_idx, off)
         attn = L.mha_decode_paged(blk_params["attn"], h, cfg, positions,
                                   k_pages_l, v_pages_l, view.block_tables,
-                                  attn_lengths)
+                                  attn_lengths, act_q=aq)
         x = x + attn
         h = L.apply_norm(blk_params["ln2"], x, cfg)
         if cfg.is_moe:
-            y, _ = M.apply_moe(blk_params["moe"], h, cfg)
+            y, _ = M.apply_moe(blk_params["moe"], h, cfg, act_q=aq)
         else:
-            y = L.apply_mlp(blk_params["mlp"], h, cfg)
+            y = L.apply_mlp(blk_params["mlp"], h, cfg, act_q=aq)
         return (L.constrain_act(x + y),), (k_pages_l, v_pages_l)
 
     (x,), (ks, vs) = scan_blocks(
@@ -366,6 +380,44 @@ def decode_step_paged(params, view, tokens: jax.Array, active: jax.Array,
     new_lengths = jnp.where(active, pos + 1, pos).astype(jnp.int32)
     return logits, view._replace(k_pages=ks, v_pages=vs,
                                  lengths=new_lengths)
+
+
+# ----------------------------------------------------- act calibration --
+
+def collect_act_calibration(params, tokens: jax.Array, cfg: ModelConfig):
+    """One forward over calibration prompts, capturing per layer the
+    float activation feeding each quantized-matmul site
+    (:data:`repro.models.layers.ACT_SITES`): attn_in (ln1 output →
+    wq/wk/wv), attn_out (attention context → wo), mlp_in (ln2 output →
+    gate/up), mlp_mid (MLP intermediate → w_down; dense blocks only —
+    MoE expert intermediates stay fp, see DESIGN.md).  Returns
+    ``{site: [L, B, S, ...]}`` stacked by the layer scan; the runtime
+    fits per-(layer, site) ``ExpQuantParams`` on these samples.  Runs on
+    the params as-is (no act_q consulted), so the captured tensors are
+    the float values the quantizer will stand in for."""
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    mask = ("causal", None)
+
+    def body(carry, blk_params):
+        x, = carry
+        h1 = L.apply_norm(blk_params["ln1"], x, cfg)
+        attn, ctx = L.mha(blk_params["attn"], h1, cfg, positions, mask,
+                          return_ctx=True)
+        x = x + attn
+        h2 = L.apply_norm(blk_params["ln2"], x, cfg)
+        sites = {"attn_in": h1, "attn_out": ctx, "mlp_in": h2}
+        if cfg.is_moe:
+            y, _ = M.apply_moe(blk_params["moe"], h2, cfg)
+        else:
+            y, mid = L.apply_mlp(blk_params["mlp"], h2, cfg,
+                                 return_mid=True)
+            sites["mlp_mid"] = mid
+        return (L.constrain_act(x + y),), sites
+
+    (_x,), sites = scan_blocks(body, (x,), params["blocks"], cfg)
+    return sites
 
 
 # ---------------------------------------------------------------- loss --

@@ -164,6 +164,10 @@ class _SeqState:
     submit_t: float = 0.0         # wall stamp at submit()
     admit_t: float | None = None  # first admission into a slot
     first_token_t: float | None = None
+    # memoized trie lookup: (trie generation, prompt length, match) —
+    # while the queue head stays blocked the trie only changes on
+    # retire/evict events, so the per-tick re-walk is pure waste
+    match_cache: tuple | None = None
 
     def full_prompt(self) -> np.ndarray:
         """Prompt plus tokens generated before a preemption: greedy
@@ -196,6 +200,8 @@ class Engine:
 
     def __init__(self, cfg: ModelConfig, params=None, rng_seed: int = 0,
                  quant_bits: int | None = None,
+                 act_quant: int | None = None,
+                 calib_prompts=None,
                  engine: EngineConfig | None = None,
                  kv_dtype: str | jnp.dtype = "float32"):
         self.cfg = cfg
@@ -217,6 +223,22 @@ class Engine:
         if quant_bits is not None:
             params, self.quant_report = ll.quantize_tree(
                 params, quant_bits, axes=self.api.logical_axes())
+        self.act_report = None
+        if act_quant is not None:
+            # DNA-TEQ activation quantization: fit per-(layer, site)
+            # ExpQuantParams on sample prompts (disk-cached next to the
+            # autotuner cache) and splice the tables into the params
+            # tree — the serving steps then encode activations at their
+            # sites and every covered matmul runs dual-LUT
+            # (code-in/code-out through the MLP chain).  Calibration
+            # observes the *weight-quantized* model: that is what
+            # serving runs, so the fit absorbs weight-decode error too.
+            from repro.runtime.calibration import calibrate_act_quant
+
+            params, self.act_report = calibrate_act_quant(
+                self.api, params, cfg, bits=act_quant,
+                prompts=calib_prompts,
+                seq_len=min(32, self.engine_cfg.max_seq_len))
         self.params = params
 
         max_blk = math.ceil(ec.max_seq_len / ec.block_size)
@@ -242,6 +264,7 @@ class Engine:
         self.prefill_batches = 0      # chunked prefill dispatches issued
         self.preemptions = 0
         self.admission_reorders = 0   # prefix-hits admitted past a blocked head
+        self.trie_match_reuses = 0    # per-request matches served from cache
 
         self._prefill = _jit_prefill(self.api.prefill_into_cache)
         self._decode = _jit_decode(self.api.decode_step_paged)
@@ -496,6 +519,25 @@ class Engine:
                   self.cache.max_blocks_per_seq * bs)
         return max(min(padded, cap), 1)
 
+    def _trie_match(self, st: _SeqState):
+        """The request's trie match, cached across scheduler ticks.
+
+        A blocked queue head (and the reorder-scan candidates behind
+        it) would otherwise re-walk the trie every tick; the match only
+        changes when the trie's structure does (retire inserts, evict
+        removes — tracked by ``PrefixCache.generation``) or when the
+        request's effective prompt grows (preemption appends generated
+        tokens).  Cache hits count in ``trie_match_reuses``."""
+        prompt = st.full_prompt()
+        mc = st.match_cache
+        gen = self.prefix.generation
+        if mc is not None and mc[0] == gen and mc[1] == len(prompt):
+            self.trie_match_reuses += 1
+            return mc[2]
+        match = self.prefix.match(prompt)
+        st.match_cache = (gen, len(prompt), match)
+        return match
+
     # ----------------------------------------------------------- admission
     def _try_place(self, st: _SeqState, *, allow_preempt: bool = True,
                    match: tuple | None = None) -> bool:
@@ -585,7 +627,9 @@ class Engine:
             # the queue front, so a later popleft could grab the wrong
             # element
             st = self._queue.popleft()
-            if self._try_place(st):
+            match = (self._trie_match(st) if self.prefix is not None
+                     else None)
+            if self._try_place(st, match=match):
                 admitted += 1
                 continue
             self._queue.appendleft(st)    # head-of-line: wait for pages
@@ -608,7 +652,7 @@ class Engine:
                and None in self._slots):
             st = self._queue[idx]
             scanned += 1
-            match = self.prefix.match(st.full_prompt())
+            match = self._trie_match(st)
             if match[1] == 0:
                 idx += 1
                 continue

@@ -89,6 +89,11 @@ class PrefixCache:
         self.root = PrefixNode((), -1, None)
         self.stats = PrefixStats()
         self._tick = 0
+        # structural version: bumped whenever a node is added (insert)
+        # or removed (evict).  match() over a fixed prompt is a pure
+        # function of this — the engine caches per-request matches
+        # across scheduler ticks and revalidates on the generation.
+        self.generation = 0
 
     # ------------------------------------------------------------ walk
     def _nodes(self) -> Iterator[PrefixNode]:
@@ -206,6 +211,7 @@ class PrefixCache:
                 node.children[chunk] = child
                 node = child
                 self.stats.inserted_pages += 1
+                self.generation += 1
             else:
                 # partial tail page: insert as a leaf and stop
                 if page not in shared:
@@ -213,6 +219,7 @@ class PrefixCache:
                     leaf.last_used = self._tick
                     node.children[chunk] = leaf
                     self.stats.inserted_pages += 1
+                    self.generation += 1
                 break
             c += bs
         # NOTE: a partial node matched at admission stays a leaf; a
@@ -240,6 +247,7 @@ class PrefixCache:
                 del nd.parent.children[nd.key]
                 self.allocator.decref(nd.page)
                 self.stats.evicted_pages += 1
+                self.generation += 1
                 freed += 1
         return freed
 

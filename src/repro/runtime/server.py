@@ -39,7 +39,8 @@ __all__ = ["InferenceServer", "Request", "Completion"]
 
 class InferenceServer:
     def __init__(self, cfg: ModelConfig, params=None, rng_seed: int = 0,
-                 quant_bits: int | None = None, max_len: int = 512,
+                 quant_bits: int | None = None,
+                 act_quant: int | None = None, max_len: int = 512,
                  kv_dtype: str | jnp.dtype = "float32",
                  num_slots: int = 8, block_size: int = 16,
                  prefix_cache: bool = True, prefill_chunk: int = 256):
@@ -54,7 +55,12 @@ class InferenceServer:
         cache.  Disable for a cold-path baseline.  ``prefill_chunk``
         bounds how many prompt tokens one scheduler tick may prefill
         per sequence (chunked flash prefill) — long prompts interleave
-        with running decodes instead of monopolizing a tick."""
+        with running decodes instead of monopolizing a tick.
+        ``act_quant`` serves *activations* as DNA-TEQ codes too (paper
+        §II-C): the engine fits per-(layer, site) params on sample
+        prompts at startup (disk-cached) and every covered matmul runs
+        the dual-LUT kernel — applies to the Engine path only (the
+        bucketed fallback stays fp-act)."""
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         self.max_len = max_len
@@ -63,6 +69,7 @@ class InferenceServer:
         self.block_size = block_size
         self.prefix_cache = prefix_cache
         self.prefill_chunk = prefill_chunk
+        self.act_quant = act_quant
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
                                    dtype=jnp.float32)
@@ -103,6 +110,7 @@ class InferenceServer:
             prefill_chunk=self.prefill_chunk)
         if self.last_engine is None or self.last_engine.engine_cfg != ec:
             self.last_engine = Engine(self.cfg, params=self.params,
+                                      act_quant=self.act_quant,
                                       engine=ec, kv_dtype=self.kv_dtype)
         return self.last_engine
 
