@@ -319,8 +319,81 @@ def serving_rows() -> list[dict]:
          "derived": "batched steps to drain the stream"},
         {"name": "serving/mean_ttft_s", "value": mean_ttft,
          "derived": "mean submit -> first-token latency, paged engine"},
+        {"name": "serving/ttft_p50_s",
+         "value": float(np.percentile([c.ttft_s for c in engine_out], 50)),
+         "derived": "median TTFT, paged engine (SLOs live in tails)"},
+        {"name": "serving/ttft_p99_s",
+         "value": float(np.percentile([c.ttft_s for c in engine_out], 99)),
+         "derived": "p99 TTFT, paged engine"},
         {"name": "serving/mean_queue_wait_s", "value": mean_wait,
          "derived": "mean submit -> admission wait, paged engine"},
+        {"name": "serving/tick_p50_s",
+         "value": eng.fault_stats()["tick_p50_s"],
+         "derived": "median scheduler-tick latency (all rounds)"},
+        {"name": "serving/tick_p99_s",
+         "value": eng.fault_stats()["tick_p99_s"],
+         "derived": "p99 scheduler-tick latency (all rounds)"},
+        {"name": "serving/slow_ticks",
+         "value": eng.slow_ticks,
+         "derived": "scheduler ticks flagged by the straggler watchdog"},
+    ]
+
+
+# ---------------------------------------------------------------------
+# Overload scenario (BENCH_serving.json): a burst arriving faster than
+# the engine drains, against a bounded submit queue.  The headline is
+# honesty under pressure — every shed request is reported (status=
+# rejected), survivors' TTFT is read at p50/p99 (tails, not means), and
+# shed + completed always equals submitted.
+# ---------------------------------------------------------------------
+
+def overload_rows() -> list[dict]:
+    from repro.configs import get_config
+    from repro.runtime.engine import ST_OK, ST_REJECTED, Engine, \
+        EngineConfig, Request
+
+    cfg = get_config("qwen3-1.7b", tiny=True).replace(
+        num_layers=2, d_model=64, d_ff=192, compute_dtype="float32")
+    rng = np.random.default_rng(0)
+    n, per_tick, max_new, max_queue = 24, 2, 8, 2
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 24).astype(np.int32),
+                    max_new_tokens=max_new) for i in range(n)]
+    eng = Engine(cfg, engine=EngineConfig(
+        num_slots=2, block_size=16, max_seq_len=64,
+        max_queue=max_queue, shed_policy="reject-new"))
+    eng.generate([Request(100 + i, r.prompt, max_new_tokens=2)
+                  for i, r in enumerate(reqs[:2])])   # warm the compiles
+    waiting = list(reqs)
+    while waiting or eng.pending:
+        for _ in range(per_tick):                     # the burst: 2/tick
+            if waiting:
+                eng.submit(waiting.pop(0))
+        eng.step()
+    outs = eng.run()
+    ok = [c for c in outs if c.status == ST_OK]
+    rejected = [c for c in outs if c.status == ST_REJECTED]
+    fs = eng.fault_stats()
+    return [
+        {"name": "overload/submitted", "value": n,
+         "derived": f"burst of {per_tick}/tick into max_queue="
+                    f"{max_queue}, {eng.engine_cfg.num_slots} slots"},
+        {"name": "overload/shed", "value": eng.shed,
+         "derived": "requests rejected by backpressure (reject-new)"},
+        {"name": "overload/completed_ok", "value": len(ok),
+         "derived": "requests served to completion under the burst"},
+        {"name": "overload/reported_rejected", "value": len(rejected),
+         "derived": "completions carrying status=rejected (must equal "
+                    "shed: nothing vanishes)"},
+        {"name": "overload/ttft_p50_s",
+         "value": float(np.percentile([c.ttft_s for c in ok], 50)),
+         "derived": "median TTFT of survivors under overload"},
+        {"name": "overload/ttft_p99_s",
+         "value": float(np.percentile([c.ttft_s for c in ok], 99)),
+         "derived": "p99 TTFT of survivors under overload"},
+        {"name": "overload/tick_p50_s", "value": fs["tick_p50_s"],
+         "derived": "median scheduler-tick latency under the burst"},
+        {"name": "overload/tick_p99_s", "value": fs["tick_p99_s"],
+         "derived": "p99 scheduler-tick latency under the burst"},
     ]
 
 
@@ -482,7 +555,8 @@ def main(out_path: str = "BENCH_kernels.json") -> None:
 
 def main_serving(out_path: str = "BENCH_serving.json") -> None:
     out = {"host_backend": jax.default_backend(),
-           "rows": serving_rows() + prefix_rows() + longprompt_rows()}
+           "rows": (serving_rows() + prefix_rows() + longprompt_rows()
+                    + overload_rows())}
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     for row in out["rows"]:

@@ -5,17 +5,27 @@
 
 ``--bucketed`` runs the legacy length-bucketed contiguous-cache path
 instead (the baseline the engine is measured against).
+
+Failure-model knobs: ``--deadline-s`` stamps every request with a
+wall-clock budget, ``--max-queue``/``--shed-policy`` bound the waiting
+queue, and ``--chaos <seed>`` arms the seeded fault injectors at every
+site (ChaosConfig.storm).  Ctrl-C drains gracefully: running slots
+finish their tokens, still-queued requests complete with
+``status=rejected``, and every submitted request stays accounted for.
 """
 
 from __future__ import annotations
 
 import argparse
+import signal
 import time
 
 import numpy as np
 
 from repro.configs import get_config
-from repro.runtime.engine import Engine, EngineConfig, Request
+from repro.runtime.chaos import ChaosConfig
+from repro.runtime.engine import (Engine, EngineConfig, Request, ST_OK,
+                                  SHED_POLICIES)
 from repro.runtime.server import InferenceServer
 
 
@@ -52,6 +62,18 @@ def main():
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="tokens of system prompt shared by all requests "
                          "(exercises the prefix cache)")
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="per-request wall-clock budget from submit; "
+                         "blown budgets end with status=deadline_exceeded")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="bound on the waiting queue; overload resolves "
+                         "per --shed-policy (engine path only)")
+    ap.add_argument("--shed-policy", choices=SHED_POLICIES,
+                    default="reject-new",
+                    help="overload policy once --max-queue is full")
+    ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
+                    help="arm the seeded chaos injectors at every fault "
+                         "site (deterministic per seed; engine path only)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -62,7 +84,8 @@ def main():
         Request(i, np.concatenate(
             [shared, rng.integers(0, cfg.vocab_size,
                                   args.prompt_len).astype(np.int32)]),
-                max_new_tokens=args.new_tokens)
+                max_new_tokens=args.new_tokens,
+                deadline_s=args.deadline_s)
         for i in range(args.requests)
     ]
 
@@ -85,6 +108,8 @@ def main():
         eng = Engine(
             cfg, quant_bits=args.quant, act_quant=args.act_quant,
             kv_dtype=args.kv_dtype,
+            chaos=(None if args.chaos is None
+                   else ChaosConfig.storm(args.chaos)),
             engine=EngineConfig(num_slots=args.slots,
                                 block_size=args.block_size,
                                 max_seq_len=max(args.max_len,
@@ -92,9 +117,36 @@ def main():
                                                 + args.prompt_len
                                                 + args.new_tokens),
                                 prefix_cache=not args.no_prefix_cache,
-                                prefill_chunk=args.prefill_chunk))
+                                prefill_chunk=args.prefill_chunk,
+                                max_queue=args.max_queue,
+                                shed_policy=args.shed_policy))
+        # graceful SIGINT drain: first ^C stops admitting (queued
+        # requests go terminal with status=rejected) while running
+        # slots finish; a second ^C raises KeyboardInterrupt as usual
+        interrupted = False
+
+        def _sigint(signum, frame):
+            nonlocal interrupted
+            if interrupted:
+                raise KeyboardInterrupt
+            interrupted = True
+            print("\n^C: draining — running slots finish, queued "
+                  "requests rejected (^C again to abort)")
+
+        prev = signal.signal(signal.SIGINT, _sigint)
         t0 = time.time()
-        outs = eng.generate(reqs)
+        try:
+            for r in reqs:
+                eng.submit(r)
+            drained = False
+            while eng.pending:
+                if interrupted and not drained:
+                    eng.drain_queue()
+                    drained = True
+                eng.step()
+            outs = eng.run()
+        finally:
+            signal.signal(signal.SIGINT, prev)
         dt = time.time() - t0
         quant_report = eng.quant_report
         label = (f"engine ({args.slots} slots, block {args.block_size}, "
@@ -106,12 +158,31 @@ def main():
           f"({tokens/dt:.1f} tok/s) — {label}")
     if not args.bucketed:
         import statistics as st
-        print(f"ttft: mean {st.mean(c.ttft_s for c in outs)*1e3:.1f} ms, "
-              f"max {max(c.ttft_s for c in outs)*1e3:.1f} ms; queue wait "
-              f"mean {st.mean(c.queue_wait_s for c in outs)*1e3:.1f} ms "
+        by_status: dict[str, int] = {}
+        for c in outs:
+            by_status[c.status] = by_status.get(c.status, 0) + 1
+        if set(by_status) != {ST_OK}:
+            print("statuses: " + ", ".join(
+                f"{k}={v}" for k, v in sorted(by_status.items())))
+        ok = [c for c in outs if c.status == ST_OK] or outs
+        fs = eng.fault_stats()
+        print(f"ttft: mean {st.mean(c.ttft_s for c in ok)*1e3:.1f} ms, "
+              f"max {max(c.ttft_s for c in ok)*1e3:.1f} ms; queue wait "
+              f"mean {st.mean(c.queue_wait_s for c in ok)*1e3:.1f} ms "
               f"({eng.prefill_batches} chunked prefill dispatches, "
               f"{eng.admission_reorders} prefix-aware reorders, "
               f"{eng.trie_match_reuses} trie-match reuses)")
+        print(f"ticks: {fs['ticks']} "
+              f"(p50 {fs['tick_p50_s']*1e3:.1f} ms, "
+              f"p99 {fs['tick_p99_s']*1e3:.1f} ms, "
+              f"{fs['slow_ticks']} watchdog-flagged)")
+        if args.chaos is not None:
+            print(f"chaos[seed={args.chaos}]: "
+                  f"{fs['alloc_faults_absorbed']} alloc faults absorbed, "
+                  f"{fs['nan_rows_detected']} NaN rows quarantined, "
+                  f"{fs['corruptions_detected']} corruptions caught, "
+                  f"{fs['failed']} requests failed "
+                  f"({len(eng.replay_artifacts)} replay artifacts)")
     if not args.bucketed and eng.act_report is not None:
         import statistics as st
         sq = [s for v in eng.act_report.values() for s in v]

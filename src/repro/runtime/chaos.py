@@ -1,0 +1,131 @@
+"""Seeded chaos harness for the serving Engine: deterministic fault
+injectors at the four failure sites the single-host failure model
+defines (DESIGN.md "Failure model & request lifecycle").
+
+The PIM methodology literature (Oliveira et al., 2022) names robust
+system-integration/validation tooling as the gap blocking data-centric
+architectures: an in-DRAM LUT engine assumes the *host runtime* absorbs
+faults the near-memory compute cannot.  This module is that runtime's
+proof harness — every injector draws from one ``numpy`` Generator
+seeded by ``ChaosConfig.seed``, so a chaos run is a pure function of
+(code, request stream, seed): the soak test replays bit-identically
+and a failure reproduces from its replay artifact.
+
+Injection sites (wired in ``engine.Engine``):
+
+- **allocator** (``alloc_fault``): a page allocation transiently fails.
+  Admission-time faults leave the request queued for the next tick;
+  growth-time faults preempt the sequence onto the queue front (greedy
+  decoding makes the recompute token-identical), so an allocator fault
+  never changes tokens — only latency.
+- **jitted tick** (``nan_slot``): one active slot's logits are declared
+  non-finite.  Detection is real (the jitted steps return per-row
+  ``isfinite`` flags; chaos merely forces a flag low), so a genuine
+  device NaN takes the identical path: the request fails with a replay
+  artifact, the slot lane is quarantined for a few ticks, and the rest
+  of the batch keeps running.
+- **KV pages** (``corrupt_page``): one checksummed page's bytes flip
+  (``PagedKVCache.corrupt_page``).  The engine's per-tick CRC audit
+  (auto-enabled whenever ``corrupt_rate > 0``) catches it at the start
+  of the *next* tick — before any dispatch attends the corrupt KV — and
+  fails exactly the sequences reading that page.
+- **tick latency** (``tick_delay``): the scheduler sleeps, exercising
+  the :class:`~repro.runtime.fault_tolerance.StragglerWatchdog` wired
+  into ``Engine.step``.
+
+Determinism contract: the engine calls each injector at fixed points
+in the tick (one ``tick_delay`` per step, one ``nan_slot`` per
+dispatch, one ``corrupt_page`` per step, one ``alloc_fault`` per
+allocation attempt), so for a fixed request stream the rng call
+sequence — and therefore every injected fault — is reproducible.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class ChaosConfig:
+    """Per-site fault rates; 0.0 disables a site.  All draws come from
+    one Generator seeded by ``seed``."""
+
+    seed: int = 0
+    alloc_fail_rate: float = 0.0   # per allocation attempt
+    nan_rate: float = 0.0          # per dispatch: one slot's logits go NaN
+    corrupt_rate: float = 0.0      # per tick: one checksummed page flips
+    slow_tick_rate: float = 0.0    # per tick: the scheduler stalls
+    slow_tick_s: float = 0.05      # injected stall duration
+
+    @classmethod
+    def storm(cls, seed: int, *, rate: float = 0.03,
+              slow_tick_s: float = 0.002) -> "ChaosConfig":
+        """All four sites live at a uniform rate — the soak preset
+        behind ``launch/serve.py --chaos <seed>``."""
+        return cls(seed=seed, alloc_fail_rate=rate, nan_rate=rate,
+                   corrupt_rate=rate, slow_tick_rate=rate,
+                   slow_tick_s=slow_tick_s)
+
+
+class ChaosInjector:
+    """Stateful injector: one seeded rng + per-site fire counters."""
+
+    def __init__(self, config: ChaosConfig):
+        self.cfg = config
+        self.rng = np.random.default_rng(config.seed)
+        self.alloc_faults = 0
+        self.nan_faults = 0
+        self.corrupt_faults = 0
+        self.slow_ticks = 0
+
+    # ------------------------------------------------------------ sites
+    def alloc_fault(self) -> bool:
+        """One allocation attempt: does it transiently fail?"""
+        if self.cfg.alloc_fail_rate <= 0.0:
+            return False
+        hit = bool(self.rng.random() < self.cfg.alloc_fail_rate)
+        self.alloc_faults += hit
+        return hit
+
+    def nan_slot(self, slots: list[int]) -> int | None:
+        """One dispatch: pick a slot whose logits 'went NaN', or None.
+        ``slots`` is the eligible set (rows whose logits this tick
+        actually consumes: decoding slots, or prefill rows sampling
+        their first token)."""
+        if self.cfg.nan_rate <= 0.0 or not slots:
+            return None
+        if self.rng.random() >= self.cfg.nan_rate:
+            return None
+        self.nan_faults += 1
+        return int(slots[self.rng.integers(len(slots))])
+
+    def corrupt_page(self, pages: list[int]) -> int | None:
+        """One tick: pick a checksummed page to bit-flip, or None."""
+        if self.cfg.corrupt_rate <= 0.0 or not pages:
+            return None
+        if self.rng.random() >= self.cfg.corrupt_rate:
+            return None
+        self.corrupt_faults += 1
+        return int(pages[self.rng.integers(len(pages))])
+
+    def tick_delay(self) -> float:
+        """One tick: seconds of injected scheduler stall (0.0 = none)."""
+        if self.cfg.slow_tick_rate <= 0.0:
+            return 0.0
+        if self.rng.random() >= self.cfg.slow_tick_rate:
+            return 0.0
+        self.slow_ticks += 1
+        return self.cfg.slow_tick_s
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> dict:
+        return {"chaos_seed": self.cfg.seed,
+                "chaos_alloc_faults": self.alloc_faults,
+                "chaos_nan_faults": self.nan_faults,
+                "chaos_corrupt_faults": self.corrupt_faults,
+                "chaos_slow_ticks": self.slow_ticks}
+
+
+__all__ = ["ChaosConfig", "ChaosInjector"]

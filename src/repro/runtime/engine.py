@@ -57,15 +57,49 @@ Scheduling policy (FIFO with reservation-or-preempt):
   scheduler first LRU-evicts unpinned trie pages, then preempts the
   youngest running sequence (pages released, sequence re-queued to be
   recomputed — greedy decoding makes the recompute token-identical);
+- a sequence preempted ``max_preemptions`` times is *pinned* (the
+  starvation guard): it can no longer be chosen as a victim, so the
+  evict-then-preempt ladder cannot livelock one unlucky request;
 - retirement moves pages into the trie (or frees them when the prefix
   cache is disabled).
+
+Request lifecycle (the failure model — DESIGN.md "Failure model"):
+every request ends in exactly one terminal status — ``ok``,
+``cancelled`` (`Engine.cancel` works in every state: queued,
+mid-prefill-chunk, mid-decode), ``deadline_exceeded``
+(``Request.deadline_s`` is a wall-clock budget from submit),
+``rejected`` (backpressure: a bounded submit queue sheds under
+overload, policy ``reject-new`` or ``shed-oldest``), or ``failed``
+(non-finite logits or KV corruption caught by the optional page
+checksum audit).  Termination from any state frees the slot's pages
+and decrements prefix-trie pins, so ``audit_partition`` holds after
+every transition.  ``result``/``stream`` answer honestly for every
+terminal handle — a shed request yields an empty ``rejected``
+completion instead of ``None`` or a hang.
+
+Faults (see :mod:`repro.runtime.chaos`): the jitted steps return
+per-row ``isfinite`` flags, so a NaN/Inf logits row fails only that
+request (replay artifact dumped, slot lane quarantined for a few
+ticks, batch keeps running); the checksum audit verifies every
+written page's CRC before the next dispatch; a seeded
+:class:`~repro.runtime.chaos.ChaosInjector` can force each fault
+deterministically.  Per-tick latency feeds a
+:class:`~repro.runtime.fault_tolerance.StragglerWatchdog` and a
+percentile tracker (``BENCH_serving.json`` reports p50/p99, not just
+means).  ``snapshot()``/``restore()`` rebuild the bookkeeping after a
+simulated crash: device KV is lost, every in-flight request re-queues
+to re-prefill prompt + tokens-so-far, and greedy decoding reproduces
+token-identical completions — the handoff primitive the
+prefill/decode disaggregation item needs.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import json
 import math
+import os
 import time
 from collections import deque
 from typing import Iterator, Sequence
@@ -77,8 +111,19 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import lama_layers as ll
 from repro.models import api as mapi
-from repro.runtime.paged_cache import PagedKVCache
+from repro.runtime.chaos import ChaosConfig, ChaosInjector
+from repro.runtime.fault_tolerance import LatencyTracker, StragglerWatchdog
+from repro.runtime.paged_cache import TRASH_PAGE, PagedKVCache
 from repro.runtime.prefix_cache import PrefixCache, PrefixNode
+
+# Terminal statuses: every request ends in exactly one of these.
+ST_OK = "ok"
+ST_CANCELLED = "cancelled"
+ST_DEADLINE = "deadline_exceeded"
+ST_REJECTED = "rejected"
+ST_FAILED = "failed"
+TERMINAL_STATUSES = (ST_OK, ST_CANCELLED, ST_DEADLINE, ST_REJECTED,
+                     ST_FAILED)
 
 
 @dataclasses.dataclass
@@ -87,6 +132,7 @@ class Request:
     prompt: np.ndarray            # [S] int32
     max_new_tokens: int = 16
     stop_token: int | None = None
+    deadline_s: float | None = None  # wall-clock budget from submit()
 
 
 @dataclasses.dataclass
@@ -98,6 +144,10 @@ class Completion:
     decode_steps: int = 0         # batched decode steps it participated in
     ttft_s: float = 0.0           # submit -> first token available
     queue_wait_s: float = 0.0     # submit -> first admission into a slot
+    status: str = ST_OK           # terminal status (TERMINAL_STATUSES)
+
+
+SHED_POLICIES = ("reject-new", "shed-oldest")
 
 
 @dataclasses.dataclass
@@ -109,6 +159,12 @@ class EngineConfig:
     prefix_cache: bool = True     # radix-tree KV reuse across requests
     max_batched_prefill: int = 4  # admissions per scheduler tick
     prefill_chunk: int = 256      # max prompt tokens advanced per row/tick
+    max_queue: int | None = None  # waiting-queue bound; None -> unbounded
+    shed_policy: str = "reject-new"  # overload: reject-new | shed-oldest
+    max_preemptions: int = 3      # starvation guard: pin after N preempts
+    checksum_pages: bool = False  # per-tick KV page CRC audit
+    quarantine_ticks: int = 8     # lane rest after a non-finite dispatch
+    replay_dir: str | None = None  # where failed-request artifacts land
 
 
 _QUEUED, _RUNNING, _FINISHED = "queued", "running", "finished"
@@ -127,12 +183,20 @@ def _donate(*argnums):
     return argnums if jax.default_backend() != "cpu" else ()
 
 
+# Both wrappers also return a per-row finite flag over the logits the
+# tick consumes: NaN/Inf detection must ride the same dispatch (a
+# second host round-trip per tick would halve throughput), and the flag
+# is what the failure model quarantines on — one poisoned row fails one
+# request while the rest of the batch keeps its tokens.
+
 @functools.lru_cache(maxsize=None)
 def _jit_prefill(prefill_fn):
     def fn(params, tokens, view, start, cfg):
         logits, view = prefill_fn(params, tokens, view, cfg, start)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        return nxt, view
+        last = logits[:, -1, :]
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        ok = jnp.all(jnp.isfinite(last), axis=-1)
+        return nxt, ok, view
     return jax.jit(fn, static_argnums=(4,), donate_argnums=_donate(2))
 
 
@@ -140,8 +204,10 @@ def _jit_prefill(prefill_fn):
 def _jit_decode(step_fn):
     def fn(params, view, tokens, active, cfg):
         logits, view = step_fn(params, view, tokens, active, cfg)
-        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
-        return nxt, view
+        last = logits[:, -1, :]
+        nxt = jnp.argmax(last, axis=-1).astype(jnp.int32)
+        ok = jnp.all(jnp.isfinite(last), axis=-1)
+        return nxt, ok, view
     return jax.jit(fn, static_argnums=(4,), donate_argnums=_donate(1))
 
 
@@ -150,6 +216,7 @@ class _SeqState:
     request: Request
     seq_no: int = 0               # submission order (preemption priority)
     status: str = _QUEUED
+    term: str = ST_OK             # terminal status once status==_FINISHED
     slot: int = -1
     tokens: list[int] = dataclasses.field(default_factory=list)
     next_token: int = 0
@@ -186,7 +253,7 @@ class _SeqState:
         return Completion(self.request.uid,
                           np.asarray(self.tokens, np.int32),
                           self.prefill_s, self.decode_s, self.decode_steps,
-                          ttft_s=ttft, queue_wait_s=wait)
+                          ttft_s=ttft, queue_wait_s=wait, status=self.term)
 
 
 class Engine:
@@ -203,7 +270,8 @@ class Engine:
                  act_quant: int | None = None,
                  calib_prompts=None,
                  engine: EngineConfig | None = None,
-                 kv_dtype: str | jnp.dtype = "float32"):
+                 kv_dtype: str | jnp.dtype = "float32",
+                 chaos: ChaosConfig | ChaosInjector | None = None):
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         if not self.supports(cfg):
@@ -215,6 +283,15 @@ class Engine:
         if ec.prefill_chunk < 1:
             raise ValueError(f"prefill_chunk must be >= 1, got "
                              f"{ec.prefill_chunk}")
+        if ec.shed_policy not in SHED_POLICIES:
+            raise ValueError(f"shed_policy must be one of {SHED_POLICIES}, "
+                             f"got {ec.shed_policy!r}")
+        self.chaos: ChaosInjector | None = (
+            ChaosInjector(chaos) if isinstance(chaos, ChaosConfig) else chaos)
+        # the CRC audit is the *detector* for KV corruption: auto-arm it
+        # whenever chaos can corrupt pages, else honor the config flag
+        self._checksum = ec.checksum_pages or (
+            self.chaos is not None and self.chaos.cfg.corrupt_rate > 0)
         self.kv_dtype = jnp.dtype(kv_dtype)
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
@@ -266,12 +343,41 @@ class Engine:
         self.admission_reorders = 0   # prefix-hits admitted past a blocked head
         self.trie_match_reuses = 0    # per-request matches served from cache
 
+        # ------------------------------------------ lifecycle & faults
+        self._clock = time.time       # injectable for deadline tests
+        self._tick_no = 0
+        self.cancelled = 0            # Engine.cancel() terminations
+        self.deadline_expired = 0     # deadline_s budgets blown
+        self.shed = 0                 # backpressure rejections
+        self.failed = 0               # NaN/corruption terminations
+        self.starvation_pins = 0      # sequences pinned by the guard
+        self.alloc_faults_absorbed = 0  # injected alloc failures survived
+        self.nan_rows_detected = 0    # non-finite logits rows quarantined
+        self.corruptions_detected = 0  # CRC mismatches caught
+        self.slow_ticks = 0           # watchdog-flagged scheduler ticks
+        self.quarantines = 0          # slot lanes rested after a fault
+        self.replay_artifacts: list[dict] = []
+        self._quarantined: dict[int, int] = {}   # slot -> release tick
+        self._chaos_blocked = False   # admission faulted this tick
+        self._page_crc: dict[int, int] = {}      # page -> CRC32 (audit)
+        self.watchdog = StragglerWatchdog(threshold=3.0)
+        self.tick_latency = LatencyTracker()
+
         self._prefill = _jit_prefill(self.api.prefill_into_cache)
         self._decode = _jit_decode(self.api.decode_step_paged)
 
     # ---------------------------------------------------------------- api
     def submit(self, request: Request) -> int:
-        """Enqueue a request; returns its handle (the uid)."""
+        """Enqueue a request; returns its handle (the uid).
+
+        Backpressure: with ``max_queue`` set, an over-bound submit is
+        resolved by the shed policy — ``reject-new`` makes *this*
+        request immediately terminal with ``status=rejected`` (the
+        handle is still returned; ``result`` answers honestly), while
+        ``shed-oldest`` rejects the oldest still-queued request and
+        enqueues the new one.  Malformed requests raise instead: a
+        rejected status means "the system was full", never "you sent
+        garbage"."""
         if request.uid in self._states:
             raise ValueError(f"duplicate uid {request.uid}")
         plen = len(request.prompt)
@@ -281,31 +387,154 @@ class Engine:
                 f"{request.max_new_tokens} exceeds max_seq_len "
                 f"{self.engine_cfg.max_seq_len}")
         st = _SeqState(request, seq_no=self._seq_counter,
-                       submit_t=time.time())
+                       submit_t=self._clock())
         self._seq_counter += 1
         self._states[request.uid] = st
+        ec = self.engine_cfg
+        if ec.max_queue is not None and len(self._queue) >= ec.max_queue:
+            self.shed += 1
+            if ec.shed_policy == "reject-new":
+                st.status, st.term = _FINISHED, ST_REJECTED
+                return request.uid
+            self._terminate(self._queue[0], ST_REJECTED)  # shed-oldest
         self._queue.append(st)
         return request.uid
+
+    def cancel(self, handle: int) -> bool:
+        """Cancel a request in ANY live state — queued, mid-prefill-
+        chunk (partial pages freed, trie pins decremented), or
+        mid-decode.  Returns True if the request was live (now terminal
+        with ``status=cancelled``, tokens-so-far retained), False if it
+        was already terminal or unknown."""
+        st = self._states.get(handle)
+        if st is None or st.status == _FINISHED:
+            return False
+        self._terminate(st, ST_CANCELLED)
+        self.cancelled += 1
+        return True
+
+    def drain_queue(self, status: str = ST_REJECTED) -> int:
+        """Graceful-shutdown half-step: make every *queued* (not yet
+        admitted) request terminal with ``status`` while running slots
+        keep decoding.  Returns the number drained.  The serve launcher
+        calls this on SIGINT, then steps until the slots retire."""
+        n = 0
+        while self._queue:
+            self._terminate(self._queue[0], status)
+            self.shed += status == ST_REJECTED
+            n += 1
+        return n
+
+    # ------------------------------------------------- crash recovery
+    def snapshot(self) -> dict:
+        """JSON-serializable record of the engine's request
+        bookkeeping.  Device KV is deliberately NOT captured — a crash
+        loses it — so the snapshot holds exactly what re-prefilling
+        needs: each live request's prompt, generated tokens, and
+        lifecycle stamps, plus terminal completions not yet collected.
+        Greedy decoding makes the rebuilt engine's completions
+        token-identical to the uninterrupted run; this is the handoff
+        format the prefill/decode disaggregation work inherits."""
+        reqs = []
+        for st in sorted(self._states.values(), key=lambda s: s.seq_no):
+            r = st.request
+            reqs.append({
+                "uid": int(r.uid),
+                "prompt": np.asarray(r.prompt, np.int32).tolist(),
+                "max_new_tokens": int(r.max_new_tokens),
+                "stop_token": (None if r.stop_token is None
+                               else int(r.stop_token)),
+                "deadline_s": r.deadline_s,
+                "tokens": [int(t) for t in st.tokens],
+                "terminal": st.status == _FINISHED,
+                "term": st.term,
+                "preemptions": st.preemptions,
+                "decode_steps": st.decode_steps,
+                "submit_t": st.submit_t,
+            })
+        return {"version": 1, "requests": reqs}
+
+    def restore(self, snap: dict) -> int:
+        """Rebuild bookkeeping from :meth:`snapshot` into this (idle)
+        engine: terminal requests keep their statuses/results; every
+        in-flight request re-queues to re-prefill prompt +
+        tokens-so-far from a cold cache.  Returns the number
+        re-queued.  TTFT/queue-wait stamps restart (the crash ate
+        them); deadlines keep their original submit stamp, so a budget
+        blown during the outage expires on the first tick."""
+        if self._states or self.pending:
+            raise RuntimeError("restore() needs an idle engine: build a "
+                               "fresh one for the rebuilt workload")
+        if snap.get("version") != 1:
+            raise ValueError(f"unknown snapshot version {snap.get('version')}")
+        requeued = 0
+        for rec in snap["requests"]:
+            req = Request(rec["uid"],
+                          np.asarray(rec["prompt"], np.int32),
+                          max_new_tokens=rec["max_new_tokens"],
+                          stop_token=rec["stop_token"],
+                          deadline_s=rec["deadline_s"])
+            st = _SeqState(req, seq_no=self._seq_counter,
+                           submit_t=rec["submit_t"])
+            self._seq_counter += 1
+            st.tokens = list(rec["tokens"])
+            if st.tokens:
+                st.next_token = st.tokens[-1]
+            st.preemptions = rec["preemptions"]
+            st.decode_steps = rec["decode_steps"]
+            self._states[req.uid] = st
+            if rec["terminal"]:
+                st.status, st.term = _FINISHED, rec["term"]
+            else:
+                self._queue.append(st)
+                requeued += 1
+        return requeued
 
     @property
     def pending(self) -> bool:
         return bool(self._queue) or any(s is not None for s in self._slots)
 
     def step(self) -> list[Completion]:
-        """One scheduler tick: admit, advance prefills by one chunk,
-        decode once, retire.  Returns the completions that finished
-        during this tick."""
+        """One scheduler tick: expire deadlines, audit checksums,
+        admit, advance prefills by one chunk, decode once, retire.
+        Returns the completions that finished during this tick."""
+        t_tick = time.time()
+        self._tick_no += 1
+        self._chaos_blocked = False
+        if self.chaos is not None:
+            delay = self.chaos.tick_delay()
+            if delay > 0.0:
+                time.sleep(delay)
+        self._expire_deadlines()
+        self._audit_pages()
+        for slot in [s for s, until in self._quarantined.items()
+                     if until <= self._tick_no]:
+            del self._quarantined[slot]
         self._admit()
-        if self._queue and all(s is None for s in self._slots):
+        if (self._queue and all(s is None for s in self._slots)
+                and not self._chaos_blocked and not self._quarantined):
             raise RuntimeError(
                 "no admissible request: head of queue needs more KV "
                 "blocks than the pool can ever free")
         finished = self._prefill_tick()
         active = [(i, s) for i, s in enumerate(self._slots)
                   if s is not None and s.prefill_done]
-        if not active:
-            return finished
+        if active:
+            finished += self._decode_tick(active)
+        # chaos: flip a bit in one checksummed page at the very end of
+        # the tick — the audit at the top of the NEXT tick must catch
+        # it before any dispatch attends the corrupt KV
+        if self.chaos is not None and self._page_crc:
+            page = self.chaos.corrupt_page(sorted(self._page_crc))
+            if page is not None:
+                self.cache.corrupt_page(page)
+        dt_tick = time.time() - t_tick
+        self.tick_latency.observe(dt_tick)
+        if self.watchdog.observe(self._tick_no, dt_tick):
+            self.slow_ticks += 1
+        return finished
 
+    def _decode_tick(self, active) -> list[Completion]:
         # grow any sequence whose next write crosses a block boundary —
         # oldest first, so page pressure falls on the youngest (it is
         # the one evicted/preempted if the free list runs dry)
@@ -315,20 +544,23 @@ class Engine:
         active = [(i, s) for i, s in enumerate(self._slots)
                   if s is not None and s.prefill_done]
         if not active:
-            return finished
+            return []
 
         ec = self.engine_cfg
         tokens = np.zeros((ec.num_slots, 1), np.int32)
         active_mask = np.zeros((ec.num_slots,), bool)
+        pre_pos: dict[int, int] = {}    # write position, for checksums
         for i, st in active:
             tokens[i, 0] = st.next_token
             active_mask[i] = True
+            pre_pos[i] = int(self.cache.lengths[i])
 
         t0 = time.time()
-        nxt_dev, view = self._decode(
+        nxt_dev, ok_dev, view = self._decode(
             self.params, self.cache.view(cols=self._live_cols(active)),
             jnp.asarray(tokens), jnp.asarray(active_mask), self.cfg)
         nxt = np.asarray(nxt_dev)   # blocks until the step is done
+        ok = np.array(ok_dev)       # writable: chaos may force a row low
         dt = time.time() - t0
         self.cache.update_pages(view)
         # the device-computed lengths are the single source of truth
@@ -336,12 +568,28 @@ class Engine:
         # (their lengths ride through the decode step unchanged)
         self.cache.lengths[:] = np.asarray(view.lengths)
         self.total_decode_steps += 1
+        if self.chaos is not None:
+            bad = self.chaos.nan_slot([i for i, _ in active])
+            if bad is not None:
+                ok[bad] = False     # identical path to a real device NaN
+        finished: list[Completion] = []
+        bs = ec.block_size
         for i, st in active:
+            if not ok[i]:
+                # non-finite logits: fail THIS request, rest the lane,
+                # keep the batch running
+                self.nan_rows_detected += 1
+                self._quarantine(i)
+                self._fault(st, "nan_logits")
+                continue
             st.decode_steps += 1
             st.decode_s += dt
             tok = int(nxt[i])
             st.tokens.append(tok)
             st.next_token = tok
+            if self._checksum:
+                page = int(self.cache.block_tables[i, pre_pos[i] // bs])
+                self._page_crc[page] = self.cache.page_checksum(page)
             if self._should_stop(st):
                 finished.append(self._retire(i))
         return finished
@@ -404,6 +652,129 @@ class Engine:
         else:
             self.cache.audit_partition(set(), {})
 
+    def fault_stats(self) -> dict:
+        """Lifecycle / fault / latency counters for benches and logs."""
+        d = {"ticks": self._tick_no,
+             "cancelled": self.cancelled,
+             "deadline_expired": self.deadline_expired,
+             "shed": self.shed,
+             "failed": self.failed,
+             "starvation_pins": self.starvation_pins,
+             "alloc_faults_absorbed": self.alloc_faults_absorbed,
+             "nan_rows_detected": self.nan_rows_detected,
+             "corruptions_detected": self.corruptions_detected,
+             "quarantines": self.quarantines,
+             "slow_ticks": self.slow_ticks,
+             "tick_p50_s": self.tick_latency.percentile(50),
+             "tick_p99_s": self.tick_latency.percentile(99),
+             "tick_mean_s": self.tick_latency.mean_s}
+        if self.chaos is not None:
+            d.update(self.chaos.stats())
+        return d
+
+    # ------------------------------------------------------ failure model
+    def _terminate(self, st: _SeqState, status: str) -> None:
+        """The ONE transition to a non-ok terminal state, legal from any
+        live state.  Running: the slot's owned pages go back to the free
+        list and its trie pins drop (the page-partition audit holds
+        immediately after).  Queued: the request leaves the queue.
+        Tokens generated so far are retained in the Completion."""
+        assert status in TERMINAL_STATUSES, status
+        if st.status == _RUNNING:
+            slot = st.slot
+            self._slots[slot] = None
+            self.cache.release_slot(slot)
+            if self.prefix is not None:
+                self.prefix.unpin(st.pinned)
+            st.pinned = []
+            st.slot = -1
+        elif st.status == _QUEUED:
+            try:
+                self._queue.remove(st)
+            except ValueError:
+                pass    # mid-submit: not enqueued yet
+        st.status, st.term = _FINISHED, status
+
+    def _fault(self, st: _SeqState, kind: str) -> None:
+        """Fail one request on a detected fault: dump a replay artifact
+        first (the state needed to reproduce), then terminate."""
+        self._replay_artifact(st, kind)
+        self.failed += 1
+        self._terminate(st, ST_FAILED)
+
+    def _quarantine(self, slot: int) -> None:
+        """Rest a slot lane after a non-finite dispatch: admission
+        skips it until the release tick.  On real hardware this is the
+        window for the lane's PIM banks to be scrubbed/re-verified."""
+        self._quarantined[slot] = (self._tick_no
+                                   + self.engine_cfg.quarantine_ticks)
+        self.quarantines += 1
+
+    def _replay_artifact(self, st: _SeqState, kind: str) -> None:
+        art = {"kind": kind,
+               "tick": self._tick_no,
+               "uid": int(st.request.uid),
+               "prompt": np.asarray(st.request.prompt, np.int32).tolist(),
+               "tokens": [int(t) for t in st.tokens],
+               "seq_no": st.seq_no,
+               "preemptions": st.preemptions,
+               "chaos": None if self.chaos is None else self.chaos.stats()}
+        self.replay_artifacts.append(art)
+        rd = self.engine_cfg.replay_dir
+        if rd:
+            os.makedirs(rd, exist_ok=True)
+            path = os.path.join(rd, f"replay_uid{art['uid']}_"
+                                    f"tick{art['tick']}.json")
+            with open(path, "w") as f:
+                json.dump(art, f)
+
+    def _expire_deadlines(self) -> None:
+        """Requests past their deadline budget go terminal wherever
+        they are — queued (never admitted) or mid-flight."""
+        now = self._clock()
+        for st in list(self._states.values()):
+            d = st.request.deadline_s
+            if (d is not None and st.status != _FINISHED
+                    and now - st.submit_t > d):
+                self._terminate(st, ST_DEADLINE)
+                self.deadline_expired += 1
+
+    def _audit_pages(self) -> None:
+        """Verify recorded page checksums before this tick's dispatch.
+        A mismatch fails every sequence whose block table references
+        the page; if the page is cached, the trie drops its whole
+        subtree (descendants spell prefixes THROUGH the corrupt page).
+        Runs at the top of the tick, so corrupt KV is never attended."""
+        if not self._checksum or not self._page_crc:
+            return
+        live: set[int] = set()
+        for i, st in enumerate(self._slots):
+            if st is not None:
+                live.update(self.cache.slot_blocks[i])
+        trie_pages = (self.prefix.pages() if self.prefix is not None
+                      else set())
+        live |= trie_pages
+        for page in [p for p in self._page_crc if p not in live]:
+            del self._page_crc[page]    # freed since recorded
+        for page, crc in list(self._page_crc.items()):
+            if self.cache.page_checksum(page) == crc:
+                continue
+            self.corruptions_detected += 1
+            for i, st in enumerate(list(self._slots)):
+                if st is not None and page in self.cache.slot_blocks[i]:
+                    self._fault(st, "kv_corruption")
+            if self.prefix is not None and page in trie_pages:
+                for freed in self.prefix.drop_subtree(page):
+                    self._page_crc.pop(freed, None)
+            self._page_crc.pop(page, None)
+
+    def _free_slot(self) -> int | None:
+        """Lowest free slot index that is not quarantined, else None."""
+        for i, s in enumerate(self._slots):
+            if s is None and i not in self._quarantined:
+                return i
+        return None
+
     # ---------------------------------------------------------- scheduler
     def _should_stop(self, st: _SeqState) -> bool:
         r = st.request
@@ -448,6 +819,11 @@ class Engine:
         st.status = _QUEUED
         st.preemptions += 1
         self.preemptions += 1
+        if st.preemptions == self.engine_cfg.max_preemptions:
+            # starvation guard trips: from now on _make_room refuses to
+            # pick this sequence as a victim (it can still self-preempt
+            # in _grow — yielding the pool beats a hard failure)
+            self.starvation_pins += 1
         self._queue.appendleft(st)
 
     def _make_room(self, need: int, seq_no: int, *,
@@ -465,6 +841,7 @@ class Engine:
             victim = None
             for st in self._slots:
                 if (st is not None and st.seq_no > seq_no
+                        and st.preemptions < self.engine_cfg.max_preemptions
                         and (victim is None or st.seq_no > victim.seq_no)):
                     victim = st
             if victim is None:
@@ -480,6 +857,14 @@ class Engine:
         pos = int(self.cache.lengths[slot])
         bs = self.engine_cfg.block_size
         if pos == len(self.cache.slot_blocks[slot]) * bs:
+            # chaos: the growth allocation transiently fails — preempt
+            # THIS sequence; greedy recompute is token-identical, so an
+            # allocator fault costs latency, never correctness
+            if self.chaos is not None and self.chaos.alloc_fault():
+                self.alloc_faults_absorbed += 1
+                self._chaos_blocked = True
+                self._preempt(slot)
+                return
             if not self._make_room(1, st.seq_no):
                 if any(s is not None and s is not st for s in self._slots):
                     self._preempt(slot)   # youngest of all: yield the pool
@@ -582,6 +967,15 @@ class Engine:
 
         if self.prefix is not None:
             self.prefix.pin(nodes)     # eviction-proof before make_room
+        # chaos: the allocation transiently fails — the request simply
+        # stays queued for the next tick (latency, never tokens)
+        if (need > 0 and self.chaos is not None
+                and self.chaos.alloc_fault()):
+            if self.prefix is not None:
+                self.prefix.unpin(nodes)
+            self.alloc_faults_absorbed += 1
+            self._chaos_blocked = True
+            return False
         if not self._make_room(need, st.seq_no, allow_preempt=allow_preempt):
             if self.prefix is not None:
                 self.prefix.unpin(nodes)
@@ -592,7 +986,8 @@ class Engine:
                 self.prefix.stats.hits += 1
             self.prefix.stats.tokens_reused += prefix_len
             self.prefix.stats.tokens_missed += plen - prefix_len
-        slot = self._slots.index(None)
+        slot = self._free_slot()
+        assert slot is not None
         self.cache.bind_slot(slot, plen, [nd.page for nd in nodes],
                              reserved=False)
         if cow:
@@ -609,7 +1004,7 @@ class Engine:
         st.prefill_pos = 0
         st.prefill_done = False
         if st.admit_t is None:
-            st.admit_t = time.time()
+            st.admit_t = self._clock()
         self._slots[slot] = st
         return True
 
@@ -621,7 +1016,7 @@ class Engine:
         get its pages, the prefix-aware fallback scans the next K=4
         waiting requests and admits cache hits first."""
         admitted = 0
-        while (self._queue and None in self._slots
+        while (self._queue and self._free_slot() is not None
                and admitted < self.engine_cfg.max_batched_prefill):
             # pop before placing: _try_place may preempt a victim onto
             # the queue front, so a later popleft could grab the wrong
@@ -649,7 +1044,7 @@ class Engine:
             return
         idx, scanned = 1, 0
         while (idx < len(self._queue) and scanned < 4 and budget > 0
-               and None in self._slots):
+               and self._free_slot() is not None):
             st = self._queue[idx]
             scanned += 1
             match = self._trie_match(st)
@@ -702,19 +1097,47 @@ class Engine:
         cols = min(self._pow2(cols_need), self.cache.max_blocks_per_seq)
 
         t0 = time.time()
-        nxt_dev, view = self._prefill(
+        nxt_dev, ok_dev, view = self._prefill(
             self.params, jnp.asarray(toks), self.cache.view(cols=cols),
             jnp.asarray(start), self.cfg)
         nxt = np.asarray(nxt_dev)   # blocks until the dispatch is done
+        ok = np.array(ok_dev)       # writable: chaos may force a row low
         dt = time.time() - t0
         self.cache.update_pages(view)
 
+        # pages this dispatch wrote, recorded per-row BEFORE retiring /
+        # faulting mutates the block tables
+        row_pages: dict[int, list[int]] = {}
+        if self._checksum:
+            for i, st in pref:
+                s0, take = int(start[i]), takes[i]
+                if take:
+                    row_pages[i] = [int(self.cache.block_tables[i, c])
+                                    for c in range(s0 // bs,
+                                                   (s0 + take - 1) // bs + 1)]
+        # only rows COMPLETING their prompt this tick consume logits —
+        # chaos (like a real device NaN) can only hit those
+        completing = [i for i, st in pref
+                      if st.prefix_len + st.prefill_pos + takes[i]
+                      >= len(st.full_prompt())
+                      and st.request.max_new_tokens > 0]
+        if self.chaos is not None:
+            bad = self.chaos.nan_slot(completing)
+            if bad is not None:
+                ok[bad] = False
         finished: list[Completion] = []
+        faulted: set[int] = set()
         for i, st in pref:
             st.prefill_s += dt      # coalesced rows share the stamp
             st.prefill_pos += takes[i]
             if st.prefix_len + st.prefill_pos < len(st.full_prompt()):
                 continue            # more chunks to go
+            if i in completing and not ok[i]:
+                self.nan_rows_detected += 1
+                self._quarantine(i)
+                self._fault(st, "nan_logits")
+                faulted.add(i)
+                continue
             st.prefill_done = True
             r = st.request
             if r.max_new_tokens > 0 and len(st.tokens) < r.max_new_tokens:
@@ -722,10 +1145,16 @@ class Engine:
                 st.tokens.append(tok)
                 st.next_token = tok
             if st.first_token_t is None and st.tokens:
-                st.first_token_t = time.time()
+                st.first_token_t = self._clock()
             if self._should_stop(st):
                 finished.append(self._retire(i))
+        for i, pages in row_pages.items():
+            if i not in faulted:    # a faulted row's pages were freed
+                for page in pages:
+                    self._page_crc[page] = self.cache.page_checksum(page)
         return finished
 
 
-__all__ = ["Engine", "EngineConfig", "Request", "Completion"]
+__all__ = ["Engine", "EngineConfig", "Request", "Completion",
+           "ST_OK", "ST_CANCELLED", "ST_DEADLINE", "ST_REJECTED",
+           "ST_FAILED", "TERMINAL_STATUSES", "SHED_POLICIES"]

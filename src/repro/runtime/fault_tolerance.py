@@ -17,6 +17,8 @@ import time
 from pathlib import Path
 from typing import Callable
 
+import numpy as np
+
 
 @dataclasses.dataclass
 class StragglerWatchdog:
@@ -55,6 +57,47 @@ class StragglerWatchdog:
             self.consecutive = 0
             self.ewma = self.alpha * dt + (1 - self.alpha) * self.ewma
         return slow
+
+
+@dataclasses.dataclass
+class LatencyTracker:
+    """Bounded per-step latency reservoir with percentile readout.
+
+    Serving SLOs live in tails, not means — a mean TTFT hides the one
+    request that waited behind a 4k prefill.  The tracker keeps an
+    evenly-strided subsample (deterministic: when full, every other
+    sample is dropped and the keep-stride doubles), so ``percentile``
+    stays honest over arbitrarily long runs at O(capacity) memory.
+    """
+
+    capacity: int = 4096
+    samples: list = dataclasses.field(default_factory=list)
+    count: int = 0          # total observations (not just retained)
+    total_s: float = 0.0
+    _stride: int = 1
+    _skip: int = 0
+
+    def observe(self, dt: float) -> None:
+        self.count += 1
+        self.total_s += dt
+        if self._skip:
+            self._skip -= 1
+            return
+        self._skip = self._stride - 1
+        self.samples.append(dt)
+        if len(self.samples) >= self.capacity:
+            self.samples = self.samples[::2]
+            self._stride *= 2
+
+    def percentile(self, q: float) -> float:
+        """q in [0, 100]; 0.0 when nothing observed yet."""
+        if not self.samples:
+            return 0.0
+        return float(np.percentile(self.samples, q))
+
+    @property
+    def mean_s(self) -> float:
+        return self.total_s / max(self.count, 1)
 
 
 class PreemptionSignal:

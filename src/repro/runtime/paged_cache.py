@@ -34,6 +34,7 @@ each step.
 from __future__ import annotations
 
 import math
+import zlib
 from typing import NamedTuple, Sequence
 
 import jax
@@ -259,6 +260,26 @@ class PagedKVCache:
         self.block_tables[slot, :] = TRASH_PAGE
         self.lengths[slot] = 0
         return blocks
+
+    # ------------------------------------------------------- checksums
+    def page_checksum(self, page: int) -> int:
+        """CRC32 over a page's K and V bytes, all layers.  The engine's
+        optional per-tick checksum audit records this after every
+        legitimate write and verifies it before the next dispatch, so a
+        bit flip in stored KV is caught before it is ever attended."""
+        k = np.asarray(self.k_pages[:, page])
+        v = np.asarray(self.v_pages[:, page])
+        return zlib.crc32(v.tobytes(), zlib.crc32(k.tobytes()))
+
+    def corrupt_page(self, page: int) -> None:
+        """Chaos-test helper: deterministically flip one stored element
+        of ``page`` to a value it cannot already hold (7 -> 11, else
+        -> 7), guaranteeing the checksum changes in every KV dtype."""
+        assert page != TRASH_PAGE, "corrupting the trash page is a no-op"
+        cur = self.k_pages[0, page, 0, 0, 0]
+        bad = jnp.where(cur == 7, jnp.asarray(11, self.dtype),
+                        jnp.asarray(7, self.dtype))
+        self.k_pages = self.k_pages.at[0, page, 0, 0, 0].set(bad)
 
     # ------------------------------------------------------------ audit
     def audit_partition(self, trie_pages: set[int],

@@ -49,6 +49,7 @@ class PrefixStats:
     dedup_pages: int = 0        # retired pages freed as duplicates
     evicted_pages: int = 0      # pages reclaimed under pressure
     cow_copies: int = 0         # shared pages cloned before a write
+    corrupt_dropped: int = 0    # pages dropped by the checksum audit
 
     @property
     def hit_rate(self) -> float:
@@ -225,6 +226,41 @@ class PrefixCache:
         # NOTE: a partial node matched at admission stays a leaf; a
         # sequence that extended it did so in a CoW copy, which lands
         # here as a *sibling* full node under the same parent.
+
+    # ------------------------------------------------------ corruption
+    def drop_subtree(self, page: int) -> list[int]:
+        """Remove the node holding ``page`` AND its whole subtree,
+        freeing every page.  Used by the engine's checksum audit when a
+        cached page's bytes flip: descendants spell prefixes *through*
+        the corrupt page, so matching them would splice corrupt KV into
+        a new sequence's context — the entire branch is unservable.
+
+        Every node in the subtree must be unpinned: the engine fails
+        (and thereby unpins) all sequences reading the corrupt page
+        first, and pinning a descendant implies pinning the whole chain
+        from the root, so no descendant can stay pinned once the
+        corrupt node's own readers are gone.  Returns the freed pages.
+        """
+        target = next((nd for nd in self._nodes() if nd.page == page),
+                      None)
+        if target is None:
+            return []
+        subtree: list[PrefixNode] = []
+        stack = [target]
+        while stack:
+            nd = stack.pop()
+            subtree.append(nd)
+            stack.extend(nd.children.values())
+        for nd in subtree:
+            assert nd.refs == 0, (nd, "pinned node in corrupt subtree")
+        del target.parent.children[target.key]
+        freed = []
+        for nd in subtree:
+            self.allocator.decref(nd.page)
+            self.stats.corrupt_dropped += 1
+            self.generation += 1
+            freed.append(nd.page)
+        return freed
 
     # ----------------------------------------------------------- evict
     def evict(self, n: int) -> int:

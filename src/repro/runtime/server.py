@@ -43,7 +43,9 @@ class InferenceServer:
                  act_quant: int | None = None, max_len: int = 512,
                  kv_dtype: str | jnp.dtype = "float32",
                  num_slots: int = 8, block_size: int = 16,
-                 prefix_cache: bool = True, prefill_chunk: int = 256):
+                 prefix_cache: bool = True, prefill_chunk: int = 256,
+                 max_queue: int | None = None,
+                 shed_policy: str = "reject-new"):
         """``kv_dtype``: KV-cache storage dtype — "float32"/"bfloat16"
         for full fidelity, "float8_e4m3fn" for the narrow-byte cache
         (dequantized in-kernel by ``decode_gqa``).  ``num_slots`` /
@@ -69,6 +71,10 @@ class InferenceServer:
         self.block_size = block_size
         self.prefix_cache = prefix_cache
         self.prefill_chunk = prefill_chunk
+        # backpressure: bound the engine's waiting queue; over-bound
+        # submits resolve per shed_policy and complete status=rejected
+        self.max_queue = max_queue
+        self.shed_policy = shed_policy
         self.act_quant = act_quant
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
@@ -107,7 +113,9 @@ class InferenceServer:
             block_size=self.block_size,
             max_seq_len=self._engine_max_seq,
             prefix_cache=self.prefix_cache,
-            prefill_chunk=self.prefill_chunk)
+            prefill_chunk=self.prefill_chunk,
+            max_queue=self.max_queue,
+            shed_policy=self.shed_policy)
         if self.last_engine is None or self.last_engine.engine_cfg != ec:
             self.last_engine = Engine(self.cfg, params=self.params,
                                       act_quant=self.act_quant,

@@ -1,0 +1,272 @@
+"""Seeded chaos harness: fault injection at every site the failure
+model defines, plus the soak acceptance property — under a storm of
+allocator failures, NaN dispatches, KV bit flips, and scheduler stalls,
+every request reaches a terminal status, non-faulted requests produce
+token-identical output to a fault-free run, and the page partition
+shows zero leaks at drain.
+"""
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.runtime.chaos import ChaosConfig, ChaosInjector
+from repro.runtime.engine import (
+    ST_FAILED,
+    ST_OK,
+    TERMINAL_STATUSES,
+    Engine,
+    EngineConfig,
+    Request,
+)
+
+TICK_CAP = 3000          # hang guard for every chaos drain loop
+
+
+def tiny_cfg(**kw):
+    base = dict(num_layers=2, d_model=64, d_ff=128,
+                compute_dtype="float32")
+    base.update(kw)
+    return get_config("qwen3-1.7b", tiny=True).replace(**base)
+
+
+def mixed_requests(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(i,
+                    rng.integers(0, cfg.vocab_size,
+                                 int(rng.integers(6, 25))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(3, 7)))
+            for i in range(n)]
+
+
+def clone(reqs):
+    return [Request(r.uid, r.prompt, r.max_new_tokens, r.stop_token)
+            for r in reqs]
+
+
+def drain_checked(eng):
+    ticks = 0
+    while eng.pending:
+        eng.step()
+        eng.check_partition()
+        ticks += 1
+        assert ticks < TICK_CAP, "chaos drain did not converge"
+    done = eng.run()
+    eng.check_partition()
+    return done
+
+
+def fault_free_tokens(cfg, params, reqs, ec):
+    eng = Engine(cfg, params=params, engine=ec)
+    return {c.uid: c.tokens for c in eng.generate(clone(reqs))}
+
+
+# ------------------------------------------------------------ injector --
+
+class TestInjector:
+    def test_same_seed_same_draws(self):
+        cfg = ChaosConfig(seed=3, alloc_fail_rate=0.3, nan_rate=0.3,
+                          corrupt_rate=0.3, slow_tick_rate=0.3)
+        a, b = ChaosInjector(cfg), ChaosInjector(cfg)
+        seq_a = [(a.alloc_fault(), a.nan_slot([0, 1, 2]),
+                  a.corrupt_page([4, 5]), a.tick_delay())
+                 for _ in range(50)]
+        seq_b = [(b.alloc_fault(), b.nan_slot([0, 1, 2]),
+                  b.corrupt_page([4, 5]), b.tick_delay())
+                 for _ in range(50)]
+        assert seq_a == seq_b
+        assert a.stats() == b.stats()
+
+    def test_zero_rates_never_fire(self):
+        inj = ChaosInjector(ChaosConfig(seed=0))
+        for _ in range(20):
+            assert not inj.alloc_fault()
+            assert inj.nan_slot([0, 1]) is None
+            assert inj.corrupt_page([2]) is None
+            assert inj.tick_delay() == 0.0
+        assert inj.stats()["chaos_alloc_faults"] == 0
+
+
+# ------------------------------------------------------------ per-site --
+
+class TestFaultSites:
+    def test_alloc_faults_cost_latency_not_tokens(self):
+        """Allocator faults at admission and growth: requests survive
+        (queued longer / preempted-and-recomputed) with identical
+        greedy tokens."""
+        cfg = tiny_cfg()
+        ec = EngineConfig(num_slots=2, block_size=8, max_seq_len=64,
+                          prefill_chunk=16)
+        reqs = mixed_requests(cfg, 6, seed=1)
+        eng = Engine(cfg, engine=ec,
+                     chaos=ChaosConfig(seed=1, alloc_fail_rate=0.5))
+        ref = fault_free_tokens(cfg, eng.params, reqs, ec)
+        for r in reqs:
+            eng.submit(r)
+        out = drain_checked(eng)
+        assert eng.alloc_faults_absorbed >= 1
+        assert all(c.status == ST_OK for c in out)
+        for c in out:
+            np.testing.assert_array_equal(c.tokens, ref[c.uid])
+
+    def test_nan_dispatch_fails_request_quarantines_lane(self):
+        """nan_rate=1.0: every dispatch poisons one row.  Each poisoned
+        request fails with a replay artifact, its lane rests, and the
+        engine still drains every request to a terminal state."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
+                                              max_seq_len=64,
+                                              quarantine_ticks=2),
+                     chaos=ChaosConfig(seed=2, nan_rate=1.0))
+        reqs = mixed_requests(cfg, 3, seed=2)
+        for r in reqs:
+            eng.submit(r)
+        out = drain_checked(eng)
+        assert all(c.status == ST_FAILED for c in out)
+        assert eng.nan_rows_detected == len(reqs)
+        assert eng.quarantines == len(reqs)
+        assert len(eng.replay_artifacts) == len(reqs)
+        assert all(a["kind"] == "nan_logits" for a in eng.replay_artifacts)
+
+    def test_corrupt_running_page_fails_owner(self):
+        """A bit flip in a running slot's written page is caught by the
+        CRC audit at the next tick, before the dispatch attends it."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
+                                              max_seq_len=96,
+                                              checksum_pages=True))
+        eng.submit(Request(0, mixed_requests(cfg, 1)[0].prompt,
+                           max_new_tokens=16))
+        for _ in range(3):
+            eng.step()
+        page = int(eng.cache.block_tables[0, 0])
+        assert page in eng._page_crc
+        eng.cache.corrupt_page(page)
+        eng.step()
+        eng.check_partition()
+        assert eng.corruptions_detected == 1
+        assert eng.result(0).status == ST_FAILED
+        assert eng.replay_artifacts[0]["kind"] == "kv_corruption"
+        assert not eng.pending
+
+    def test_corrupt_trie_page_drops_subtree(self):
+        """Corruption in a cached page drops the whole trie branch (its
+        descendants spell prefixes through it); the next request simply
+        re-prefills cold and stays token-identical."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
+                                              max_seq_len=64,
+                                              checksum_pages=True))
+        r0 = Request(0, mixed_requests(cfg, 1, seed=4)[0].prompt,
+                     max_new_tokens=4)
+        (ref,) = eng.generate([r0])
+        assert eng.prefix.num_pages >= 2
+        root_child = next(iter(eng.prefix.root.children.values()))
+        eng.cache.corrupt_page(root_child.page)
+        eng.submit(Request(1, r0.prompt, max_new_tokens=4))
+        out = drain_checked(eng)
+        assert eng.corruptions_detected == 1
+        assert eng.prefix.stats.corrupt_dropped >= 2   # whole branch
+        assert out[0].status == ST_OK
+        np.testing.assert_array_equal(out[0].tokens, ref.tokens)
+
+    def test_slow_ticks_exercise_watchdog(self):
+        from repro.runtime.fault_tolerance import (LatencyTracker,
+                                                   StragglerWatchdog)
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64),
+                     chaos=ChaosConfig(seed=5, slow_tick_rate=0.25,
+                                       slow_tick_s=0.3))
+        # warm the jit caches chaos-free, then reset the telemetry: the
+        # compile spike would otherwise sit in the EWMA warmup and mask
+        # the injected stalls
+        inj, eng.chaos = eng.chaos, None
+        eng.generate([Request(99, mixed_requests(cfg, 1)[0].prompt,
+                              max_new_tokens=2)])
+        eng.chaos = inj
+        eng.watchdog = StragglerWatchdog(threshold=3.0)
+        eng.tick_latency = LatencyTracker()
+        eng.submit(Request(0, mixed_requests(cfg, 1, seed=5)[0].prompt,
+                           max_new_tokens=20))
+        drain_checked(eng)
+        assert eng.chaos.slow_ticks >= 1
+        assert eng.slow_ticks >= 1            # watchdog flagged them
+        fs = eng.fault_stats()
+        assert fs["chaos_slow_ticks"] == eng.chaos.slow_ticks
+        assert fs["tick_p99_s"] >= fs["tick_p50_s"] > 0.0
+
+    def test_replay_artifact_written_to_disk(self, tmp_path):
+        import json
+        import os
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64,
+                                              quarantine_ticks=1,
+                                              replay_dir=str(tmp_path)),
+                     chaos=ChaosConfig(seed=6, nan_rate=1.0))
+        eng.submit(Request(0, mixed_requests(cfg, 1, seed=6)[0].prompt,
+                           max_new_tokens=4))
+        drain_checked(eng)
+        files = os.listdir(tmp_path)
+        assert len(files) == 1
+        art = json.loads((tmp_path / files[0]).read_text())
+        assert art["kind"] == "nan_logits" and art["uid"] == 0
+
+
+# ----------------------------------------------------------------- soak --
+
+class TestSoak:
+    EC = dict(num_slots=4, block_size=8, max_seq_len=96,
+              prefill_chunk=16, quarantine_ticks=4)
+    STORM = dict(alloc_fail_rate=0.05, nan_rate=0.04, corrupt_rate=0.04,
+                 slow_tick_rate=0.05, slow_tick_s=0.001)
+
+    def _storm_run(self, cfg, params, reqs, seed):
+        eng = Engine(cfg, params=params, engine=EngineConfig(**self.EC),
+                     chaos=ChaosConfig(seed=seed, **self.STORM))
+        for r in clone(reqs):
+            eng.submit(r)
+        out = drain_checked(eng)
+        return eng, out
+
+    def test_soak_every_request_terminal_no_leaks(self):
+        """~64 requests through a storm at every fault site: no hang,
+        every request terminal, ok-requests token-identical to the
+        fault-free run, zero leaked pages at drain."""
+        cfg = tiny_cfg()
+        reqs = mixed_requests(cfg, 64, seed=7)
+        ref_eng = Engine(cfg, engine=EngineConfig(**self.EC))
+        ref = fault_free_tokens(cfg, ref_eng.params, reqs,
+                                EngineConfig(**self.EC))
+        eng, out = self._storm_run(cfg, ref_eng.params, reqs, seed=7)
+
+        assert len(out) == len(reqs)
+        assert all(c.status in TERMINAL_STATUSES for c in out)
+        ok = [c for c in out if c.status == ST_OK]
+        assert ok, "storm killed every request — rates too hot"
+        for c in ok:                       # agreement must be exactly 1.0
+            np.testing.assert_array_equal(c.tokens, ref[c.uid])
+        # every site actually fired under this seed
+        st = eng.chaos.stats()
+        assert st["chaos_alloc_faults"] >= 1
+        assert st["chaos_nan_faults"] >= 1
+        assert st["chaos_corrupt_faults"] >= 1
+        assert st["chaos_slow_ticks"] >= 1
+        assert eng.failed == len(eng.replay_artifacts) >= 1
+        # zero leaks: nothing live, and the partition audit (already
+        # run every tick) holds on the final state
+        assert not eng.pending and all(s is None for s in eng._slots)
+        eng.check_partition()
+
+    def test_soak_is_deterministic_per_seed(self):
+        """Same code + request stream + seed => bit-identical statuses
+        and tokens (the property that makes replay artifacts useful)."""
+        cfg = tiny_cfg()
+        reqs = mixed_requests(cfg, 16, seed=8)
+        base = Engine(cfg, engine=EngineConfig(**self.EC))
+        runs = []
+        for _ in range(2):
+            _, out = self._storm_run(cfg, base.params, reqs, seed=11)
+            runs.append({c.uid: (c.status, tuple(int(t) for t in c.tokens))
+                         for c in out})
+        assert runs[0] == runs[1]

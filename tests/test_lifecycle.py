@@ -1,0 +1,375 @@
+"""Request lifecycle under failure: terminal statuses, cancellation at
+every stage, deadlines, backpressure, starvation pinning, honest
+result()/stream() semantics, snapshot/restore crash recovery, and the
+tick-latency/watchdog wiring.
+
+Every transition is audited: the page-partition invariant (free ∪
+slot-owned ∪ trie ∪ {trash} exact disjoint cover) must hold after a
+cancel/expiry/shed wherever in its lifecycle the request was.
+"""
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.runtime.engine import (
+    ST_CANCELLED,
+    ST_DEADLINE,
+    ST_OK,
+    ST_REJECTED,
+    TERMINAL_STATUSES,
+    Engine,
+    EngineConfig,
+    Request,
+)
+
+
+def tiny_cfg(**kw):
+    base = dict(num_layers=2, d_model=64, d_ff=128,
+                compute_dtype="float32")
+    base.update(kw)
+    return get_config("qwen3-1.7b", tiny=True).replace(**base)
+
+
+def prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+def drain_checked(eng):
+    while eng.pending:
+        eng.step()
+        eng.check_partition()
+    done = eng.run()
+    eng.check_partition()
+    return done
+
+
+# ------------------------------------------------------- cancellation --
+
+class TestCancel:
+    """Engine.cancel at every lifecycle stage, partition-audited."""
+
+    def _engine(self, cfg, **kw):
+        ec = dict(num_slots=2, block_size=8, max_seq_len=96,
+                  prefill_chunk=16)
+        ec.update(kw)
+        return Engine(cfg, engine=EngineConfig(**ec))
+
+    def test_cancel_queued(self):
+        cfg = tiny_cfg()
+        eng = self._engine(cfg, num_slots=1)
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=4))
+        eng.submit(Request(1, prompt(cfg, 8, seed=1), max_new_tokens=4))
+        eng.step()                      # admits 0; 1 stays queued
+        assert eng.cancel(1)
+        eng.check_partition()
+        out = drain_checked(eng)
+        by = {c.uid: c for c in out}
+        assert by[0].status == ST_OK and len(by[0].tokens) == 4
+        assert by[1].status == ST_CANCELLED and len(by[1].tokens) == 0
+
+    def test_cancel_mid_first_prefill_chunk(self):
+        """Cancel after one chunk of a multi-chunk prefill: the
+        partially-filled pages go back to the free list."""
+        cfg = tiny_cfg()
+        eng = self._engine(cfg)
+        eng.submit(Request(0, prompt(cfg, 48), max_new_tokens=4))
+        eng.step()                      # one 16-token chunk of 48
+        st = eng._states[0]
+        assert not st.prefill_done and st.prefill_pos > 0
+        free_before = eng.cache.allocator.free_blocks
+        assert eng.cancel(0)
+        eng.check_partition()
+        assert eng.cache.allocator.free_blocks > free_before
+        assert not eng.pending
+        assert eng.result(0).status == ST_CANCELLED
+
+    def test_cancel_between_prefill_chunks(self):
+        cfg = tiny_cfg()
+        eng = self._engine(cfg)
+        eng.submit(Request(0, prompt(cfg, 48), max_new_tokens=4))
+        eng.step()
+        eng.step()                      # two chunks in, prompt not done
+        assert not eng._states[0].prefill_done
+        assert eng.cancel(0)
+        eng.check_partition()
+        assert not eng.pending
+
+    def test_cancel_mid_decode_keeps_tokens(self):
+        cfg = tiny_cfg()
+        eng = self._engine(cfg)
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=32))
+        for _ in range(4):
+            eng.step()
+        st = eng._states[0]
+        assert st.prefill_done and len(st.tokens) >= 2
+        got = len(st.tokens)
+        assert eng.cancel(0)
+        eng.check_partition()
+        c = eng.result(0)
+        assert c.status == ST_CANCELLED and len(c.tokens) == got
+
+    def test_cancel_after_retirement_is_noop(self):
+        cfg = tiny_cfg()
+        eng = self._engine(cfg)
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=2))
+        while eng.pending:
+            eng.step()
+        assert not eng.cancel(0)        # already terminal
+        assert eng.result(0).status == ST_OK
+        assert not eng.cancel(99)       # unknown handle
+        assert eng.cancelled == 0
+
+    def test_cancel_decrements_prefix_pins(self):
+        """Cancelling a sequence reading trie pages drops its pins so
+        the pages become evictable again."""
+        cfg = tiny_cfg()
+        eng = self._engine(cfg)
+        warm = Request(0, prompt(cfg, 32), max_new_tokens=2)
+        eng.generate([warm])            # trie now holds the prefix
+        tail = np.concatenate([np.asarray(warm.prompt),
+                               prompt(cfg, 32, seed=3)])
+        eng.submit(Request(1, tail, max_new_tokens=4))
+        eng.step()                      # admitted, prefix pinned
+        assert eng.prefix.pins()
+        assert eng.cancel(1)
+        eng.check_partition()
+        assert not eng.prefix.pins()
+
+
+# ------------------------------------------------- deadlines & shedding --
+
+class TestDeadlineAndBackpressure:
+    def test_deadline_expires_queued_request(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64))
+        t0 = eng._clock()
+        eng._clock = lambda: t0
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=4))
+        eng.submit(Request(1, prompt(cfg, 8, seed=1), max_new_tokens=4,
+                           deadline_s=5.0))
+        eng.step()                      # 0 admitted, 1 waits
+        eng._clock = lambda: t0 + 10.0
+        eng.step()                      # 1's budget blown in the queue
+        eng.check_partition()
+        assert eng.result(1).status == ST_DEADLINE
+        assert eng.deadline_expired == 1
+        out = drain_checked(eng)
+        assert {c.uid: c.status for c in out}[0] == ST_OK
+
+    def test_deadline_expires_mid_decode(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=96))
+        t0 = eng._clock()
+        eng._clock = lambda: t0
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=64,
+                           deadline_s=5.0))
+        for _ in range(3):
+            eng.step()
+        got = len(eng._states[0].tokens)
+        assert got >= 1
+        eng._clock = lambda: t0 + 6.0
+        eng.step()
+        eng.check_partition()
+        c = eng.result(0)
+        assert c.status == ST_DEADLINE and len(c.tokens) >= got
+        assert not eng.pending
+
+    def test_backpressure_reject_new(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64, max_queue=1))
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=2))
+        eng.submit(Request(1, prompt(cfg, 8, seed=1), max_new_tokens=2))
+        assert eng.result(1).status == ST_REJECTED   # immediate, honest
+        assert eng.shed == 1
+        out = drain_checked(eng)
+        by = {c.uid: c.status for c in out}
+        assert by == {0: ST_OK, 1: ST_REJECTED}
+
+    def test_backpressure_shed_oldest(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64, max_queue=1,
+                                              shed_policy="shed-oldest"))
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=2))
+        eng.submit(Request(1, prompt(cfg, 8, seed=1), max_new_tokens=2))
+        assert eng.result(0).status == ST_REJECTED   # oldest shed
+        assert eng.result(1) is None                 # in flight
+        out = drain_checked(eng)
+        by = {c.uid: c.status for c in out}
+        assert by == {0: ST_REJECTED, 1: ST_OK}
+
+    def test_bad_shed_policy_rejected(self):
+        with pytest.raises(ValueError, match="shed_policy"):
+            Engine(tiny_cfg(),
+                   engine=EngineConfig(shed_policy="drop-everything"))
+
+    def test_drain_queue_rejects_waiting_only(self):
+        """SIGINT-drain semantics: queued requests go terminal
+        status=rejected while the running slot finishes its tokens."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64))
+        for i in range(3):
+            eng.submit(Request(i, prompt(cfg, 8, seed=i),
+                               max_new_tokens=4))
+        eng.step()                      # 0 running, 1-2 queued
+        assert eng.drain_queue() == 2
+        eng.check_partition()
+        out = drain_checked(eng)
+        by = {c.uid: c.status for c in out}
+        assert by == {0: ST_OK, 1: ST_REJECTED, 2: ST_REJECTED}
+        assert len([c for c in out if c.uid == 0][0].tokens) == 4
+
+    def test_starvation_guard_pins_after_max_preemptions(self):
+        """Under a pool too small for both sequences, preemption
+        ping-pong is bounded: once a sequence hits max_preemptions it
+        stops being a _make_room victim, the counter exports, and the
+        stream still completes token-identically."""
+        cfg = tiny_cfg()
+        rng = np.random.default_rng(6)
+        reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                        8).astype(np.int32),
+                        max_new_tokens=22) for i in range(2)]
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=4,
+                                              max_seq_len=32,
+                                              num_blocks=11,
+                                              max_preemptions=1))
+        for r in reqs:
+            eng.submit(r)
+        out = drain_checked(eng)
+        assert eng.preemptions >= 1
+        assert eng.starvation_pins >= 1
+        assert eng.fault_stats()["starvation_pins"] == eng.starvation_pins
+        roomy = Engine(cfg, params=eng.params,
+                       engine=EngineConfig(num_slots=2, block_size=4,
+                                           max_seq_len=64,
+                                           prefix_cache=False))
+        ref = roomy.generate([Request(r.uid, r.prompt, r.max_new_tokens)
+                              for r in reqs])
+        for a, b in zip(out, ref):
+            np.testing.assert_array_equal(a.tokens, b.tokens)
+
+
+# --------------------------------------------- result/stream semantics --
+
+class TestResultStream:
+    def test_result_none_for_inflight_and_unknown(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64))
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=4))
+        assert eng.result(0) is None    # queued
+        eng.step()
+        assert eng.result(0) is None    # running
+        assert eng.result(7) is None    # unknown
+        drain_checked(eng)
+
+    def test_stream_terminates_on_cancel(self):
+        """A stream over a cancelled request ends instead of hanging,
+        after yielding the tokens produced before the cancel."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=96))
+        h = eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=32))
+        it = eng.stream(h)
+        got = [next(it), next(it)]
+        eng.cancel(h)
+        got += list(it)                 # terminates promptly
+        c = eng.result(h)
+        assert c.status == ST_CANCELLED
+        np.testing.assert_array_equal(np.asarray(got, np.int32), c.tokens)
+
+    def test_stream_of_rejected_request_is_empty(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64, max_queue=0))
+        h = eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=4))
+        assert list(eng.stream(h)) == []
+        assert eng.result(h).status == ST_REJECTED
+
+
+# ------------------------------------------------------ crash recovery --
+
+class TestSnapshotRestore:
+    def test_restore_reproduces_tokens_exactly(self):
+        """Crash mid-flight: a fresh engine restored from the snapshot
+        re-queues every live request and finishes token-identical to
+        the uninterrupted run (greedy determinism from full_prompt)."""
+        cfg = tiny_cfg()
+        ec = EngineConfig(num_slots=2, block_size=8, max_seq_len=96,
+                          prefill_chunk=16)
+        reqs = [Request(i, prompt(cfg, 8 + 16 * (i % 2), seed=i),
+                        max_new_tokens=6) for i in range(4)]
+        base = Engine(cfg, engine=ec)
+        ref = {c.uid: c.tokens
+               for c in base.generate([Request(r.uid, r.prompt,
+                                               r.max_new_tokens)
+                                       for r in reqs])}
+
+        eng = Engine(cfg, params=base.params, engine=ec)
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(3):              # some prefilled, some decoding,
+            eng.step()                  # some still queued
+        eng.cancel(reqs[3].uid)         # a terminal status rides along
+        snap = eng.snapshot()
+        del eng                         # the "crash": device KV is gone
+
+        eng2 = Engine(cfg, params=base.params, engine=ec)
+        requeued = eng2.restore(snap)
+        assert requeued == 3
+        out = drain_checked(eng2)
+        by = {c.uid: c for c in out}
+        assert by[reqs[3].uid].status == ST_CANCELLED
+        for r in reqs[:3]:
+            assert by[r.uid].status == ST_OK
+            np.testing.assert_array_equal(by[r.uid].tokens, ref[r.uid])
+
+    def test_restore_requires_idle_engine(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64))
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=2))
+        snap = eng.snapshot()
+        with pytest.raises(RuntimeError, match="idle"):
+            eng.restore(snap)
+
+    def test_snapshot_is_json_serializable(self):
+        import json
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
+                                              max_seq_len=64))
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=8,
+                           deadline_s=30.0))
+        eng.step()                      # mid-decode, not terminal
+        snap = json.loads(json.dumps(eng.snapshot()))
+        eng2 = Engine(cfg, params=eng.params,
+                      engine=EngineConfig(num_slots=1, block_size=8,
+                                          max_seq_len=64))
+        assert eng2.restore(snap) == 1
+        assert eng2._states[0].request.deadline_s == 30.0
+        drain_checked(eng2)
+
+
+# ------------------------------------------------- watchdog & latency --
+
+class TestTickTelemetry:
+    def test_watchdog_and_latency_wired_into_step(self):
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=EngineConfig(num_slots=2, block_size=8,
+                                              max_seq_len=64))
+        for i in range(4):
+            eng.submit(Request(i, prompt(cfg, 8, seed=i),
+                               max_new_tokens=4))
+        drain_checked(eng)
+        assert eng.watchdog.seen == eng._tick_no > 0
+        assert eng.tick_latency.count == eng._tick_no
+        fs = eng.fault_stats()
+        assert fs["ticks"] == eng._tick_no
+        assert fs["tick_p99_s"] >= fs["tick_p50_s"] > 0.0
+        assert set(TERMINAL_STATUSES) >= {ST_OK}
