@@ -542,6 +542,126 @@ def longprompt_rows() -> list[dict]:
     ]
 
 
+# ---------------------------------------------------------------------
+# Disaggregated-serving scenario (BENCH_serving.json, disagg/*): a
+# 2-prefill/2-decode cluster vs one unified engine on the identical
+# request stream.  The cluster moves every finished prompt's KV pages
+# from its prefill worker to a decode worker (handoff count + bytes
+# are what an interconnect would carry) and shards the prefix trie by
+# first-page content key; requests are submitted in waves so the
+# second wave exercises the warmed shards (cross-worker hit rate).
+# Greedy decode over migrated pages must be token-identical to the
+# unified engine — CI asserts agreement == 1.0, handoffs > 0, zero
+# decode-side prefill, and a nonzero cross-worker hit rate.
+# ---------------------------------------------------------------------
+
+def disagg_rows() -> list[dict]:
+    from repro.configs import get_config
+    from repro.runtime.cluster import Cluster, ClusterConfig
+    from repro.runtime.engine import Engine, EngineConfig, Request
+
+    cfg = get_config("qwen3-1.7b", tiny=True).replace(
+        num_layers=2, d_model=64, d_ff=192, compute_dtype="float32")
+    rng = np.random.default_rng(0)
+    sys_len, tail_len, max_new, n_req = 48, 24, 8, 12
+    # two distinct system prompts -> two first-page keys -> both trie
+    # shards populate (and the router must tell them apart)
+    sys_ps = [rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+              for _ in range(2)]
+
+    def make_reqs():
+        return [Request(i, np.concatenate(
+                    [sys_ps[i % 2], rng.integers(0, cfg.vocab_size,
+                                                 tail_len).astype(np.int32)]),
+                        max_new_tokens=max_new) for i in range(n_req)]
+
+    reqs = make_reqs()
+    clone = lambda: [Request(r.uid, r.prompt, r.max_new_tokens)
+                     for r in reqs]
+    ecfg = lambda: EngineConfig(num_slots=4, block_size=16,
+                                max_seq_len=sys_len + tail_len + max_new,
+                                prefill_chunk=32)
+
+    def waves(submit, run):
+        """First wave warms the trie shards; the rest ride the cache."""
+        out = []
+        rs = clone()
+        for r in rs[:4]:
+            submit(r)
+        out += run()
+        for r in rs[4:]:
+            submit(r)
+        out += run()
+        return sorted(out, key=lambda c: c.uid)
+
+    base = Engine(cfg, engine=ecfg())
+    waves(base.submit, base.run)                  # warm the compile paths
+    t0 = time.perf_counter()
+    base_out = waves(base.submit, base.run)
+    base_dt = time.perf_counter() - t0
+
+    clu = Cluster(cfg, params=base.params,
+                  cluster=ClusterConfig(prefill_workers=2,
+                                        decode_workers=2),
+                  engine=ecfg())
+    waves(clu.submit, clu.run)                    # warm
+    t0 = time.perf_counter()
+    clu_out = waves(clu.submit, clu.run)
+    clu_dt = time.perf_counter() - t0
+    clu.check_partition()
+    cs = clu.stats()
+
+    agree = float(np.mean([np.mean(a.tokens == b.tokens)
+                           for a, b in zip(base_out, clu_out)]))
+    itl = [c.decode_s / max(c.decode_steps, 1) for c in clu_out]
+    itl_base = [c.decode_s / max(c.decode_steps, 1) for c in base_out]
+    toks = sum(len(c.tokens) for c in clu_out)
+    return [
+        {"name": "disagg/cluster_tok_s", "tok_s": toks / clu_dt,
+         "derived": f"2P/2D cluster, {n_req} reqs in 2 waves, KV pages "
+                    f"migrated prefill -> decode"},
+        {"name": "disagg/baseline_tok_s",
+         "tok_s": sum(len(c.tokens) for c in base_out) / base_dt,
+         "derived": "one unified engine, identical stream"},
+        {"name": "disagg/token_agreement", "value": agree,
+         "derived": "cluster vs unified engine, greedy tokens (decode "
+                    "over migrated pages, never recomputed)"},
+        {"name": "disagg/handoffs", "value": cs["handoffs"],
+         "derived": "prefill -> decode KV page migrations (both runs)"},
+        {"name": "disagg/handoff_bytes", "value": cs["handoff_bytes"],
+         "derived": "KV page bytes moved across the worker boundary "
+                    "(what an interconnect would carry)"},
+        {"name": "disagg/decode_side_prefill_tokens",
+         "value": cs["decode_prefill_tokens"],
+         "derived": "prompt tokens recomputed by decode workers (the "
+                    "handoff contract: must be 0)"},
+        {"name": "disagg/cross_worker_prefix_hit_rate",
+         "value": cs["cross_worker_prefix_hit_rate"],
+         "derived": "requests routed to the shard holding their longest "
+                    "cached prefix (trie consistent-hashed by "
+                    "first-page key)"},
+        {"name": "disagg/ttft_p50_s",
+         "value": float(np.percentile([c.ttft_s for c in clu_out], 50)),
+         "derived": "median submit -> first token, cluster (first token "
+                    "samples on the prefill worker)"},
+        {"name": "disagg/ttft_p99_s",
+         "value": float(np.percentile([c.ttft_s for c in clu_out], 99)),
+         "derived": "p99 TTFT, cluster"},
+        {"name": "disagg/itl_p50_s", "value": float(np.percentile(itl, 50)),
+         "derived": "median inter-token latency (decode_s/steps), "
+                    "cluster — decode ticks never stall behind prefill"},
+        {"name": "disagg/itl_p99_s", "value": float(np.percentile(itl, 99)),
+         "derived": "p99 inter-token latency, cluster"},
+        {"name": "disagg/baseline_ttft_p50_s",
+         "value": float(np.percentile([c.ttft_s for c in base_out], 50)),
+         "derived": "median TTFT, unified engine"},
+        {"name": "disagg/baseline_itl_p50_s",
+         "value": float(np.percentile(itl_base, 50)),
+         "derived": "median inter-token latency, unified engine (prefill "
+                    "chunks share its tick loop)"},
+    ]
+
+
 def main(out_path: str = "BENCH_kernels.json") -> None:
     out = {"host_backend": jax.default_backend(),
            "rows": kernel_rows() + actquant_rows()}
@@ -553,10 +673,29 @@ def main(out_path: str = "BENCH_kernels.json") -> None:
     print(f"wrote {out_path} ({len(out['rows'])} rows)")
 
 
-def main_serving(out_path: str = "BENCH_serving.json") -> None:
+# Scenario registry for --serving: each entry is one independently
+# runnable row group (its rows share the name prefix).  --scenario
+# filters to a comma-separated subset — CI smoke steps run one
+# scenario without paying for the rest.
+SERVING_SCENARIOS = {
+    "serving": serving_rows,
+    "prefix": prefix_rows,
+    "longprompt": longprompt_rows,
+    "overload": overload_rows,
+    "disagg": disagg_rows,
+}
+
+
+def main_serving(out_path: str = "BENCH_serving.json",
+                 scenarios: list[str] | None = None) -> None:
+    names = scenarios or list(SERVING_SCENARIOS)
+    unknown = [n for n in names if n not in SERVING_SCENARIOS]
+    if unknown:
+        raise SystemExit(f"unknown --scenario {unknown}; "
+                         f"choose from {sorted(SERVING_SCENARIOS)}")
     out = {"host_backend": jax.default_backend(),
-           "rows": (serving_rows() + prefix_rows() + longprompt_rows()
-                    + overload_rows())}
+           "scenarios": names,
+           "rows": [r for n in names for r in SERVING_SCENARIOS[n]()]}
     with open(out_path, "w") as f:
         json.dump(out, f, indent=1)
     for row in out["rows"]:
@@ -567,6 +706,12 @@ def main_serving(out_path: str = "BENCH_serving.json") -> None:
 
 if __name__ == "__main__":
     if sys.argv[1:2] == ["--serving"]:
-        main_serving(*sys.argv[2:3])
+        rest = sys.argv[2:]
+        scenarios = None
+        if "--scenario" in rest:
+            i = rest.index("--scenario")
+            scenarios = rest[i + 1].split(",")
+            rest = rest[:i] + rest[i + 2:]
+        main_serving(*rest[:1], scenarios=scenarios)
     else:
         main(*sys.argv[1:2])

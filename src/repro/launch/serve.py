@@ -6,6 +6,14 @@
 ``--bucketed`` runs the legacy length-bucketed contiguous-cache path
 instead (the baseline the engine is measured against).
 
+``--prefill-workers N --decode-workers M`` serves through the
+disaggregated cluster instead of one unified engine: N prefill
+workers (each with a shard of the consistent-hashed prefix cache)
+hand finished prompts' KV pages to M decode workers — greedy decode
+over the migrated pages is token-identical to the unified engine,
+and the printout adds handoff/router counters (pages moved, bytes,
+cross-worker prefix hit rate).
+
 Failure-model knobs: ``--deadline-s`` stamps every request with a
 wall-clock budget, ``--max-queue``/``--shed-policy`` bound the waiting
 queue, and ``--chaos <seed>`` arms the seeded fault injectors at every
@@ -24,6 +32,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.runtime.chaos import ChaosConfig
+from repro.runtime.cluster import Cluster, ClusterConfig
 from repro.runtime.engine import (Engine, EngineConfig, Request, ST_OK,
                                   SHED_POLICIES)
 from repro.runtime.server import InferenceServer
@@ -74,6 +83,12 @@ def main():
     ap.add_argument("--chaos", type=int, default=None, metavar="SEED",
                     help="arm the seeded chaos injectors at every fault "
                          "site (deterministic per seed; engine path only)")
+    ap.add_argument("--prefill-workers", type=int, default=0,
+                    help="disaggregated cluster: prompt-only workers "
+                         "sharding the prefix cache (0 = unified engine)")
+    ap.add_argument("--decode-workers", type=int, default=0,
+                    help="disaggregated cluster: decode-only workers "
+                         "admitting migrated KV pages (0 = unified engine)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -89,7 +104,38 @@ def main():
         for i in range(args.requests)
     ]
 
-    if args.bucketed:
+    disagg = args.prefill_workers > 0 or args.decode_workers > 0
+    if disagg and args.bucketed:
+        ap.error("--bucketed and --prefill/--decode-workers are exclusive")
+
+    if disagg:
+        clu = Cluster(
+            cfg, quant_bits=args.quant, act_quant=args.act_quant,
+            kv_dtype=args.kv_dtype,
+            chaos=(None if args.chaos is None
+                   else ChaosConfig.storm(args.chaos)),
+            cluster=ClusterConfig(
+                prefill_workers=max(args.prefill_workers, 1),
+                decode_workers=max(args.decode_workers, 1)),
+            engine=EngineConfig(num_slots=args.slots,
+                                block_size=args.block_size,
+                                max_seq_len=max(args.max_len,
+                                                args.shared_prefix
+                                                + args.prompt_len
+                                                + args.new_tokens),
+                                prefix_cache=not args.no_prefix_cache,
+                                prefill_chunk=args.prefill_chunk,
+                                max_queue=args.max_queue,
+                                shed_policy=args.shed_policy))
+        t0 = time.time()
+        outs = clu.generate(reqs)
+        dt = time.time() - t0
+        quant_report = clu.quant_report
+        cs = clu.stats()
+        label = (f"cluster ({clu.cluster_cfg.prefill_workers}P/"
+                 f"{clu.cluster_cfg.decode_workers}D, {args.slots} "
+                 f"slots/worker, block {args.block_size})")
+    elif args.bucketed:
         if args.act_quant is not None:
             print("note: --act-quant applies to the engine path only; "
                   "the bucketed baseline stays fp-act")
@@ -156,7 +202,28 @@ def main():
     tokens = sum(len(c.tokens) for c in outs)
     print(f"served {len(outs)} requests, {tokens} tokens in {dt:.2f}s "
           f"({tokens/dt:.1f} tok/s) — {label}")
-    if not args.bucketed:
+    if disagg:
+        import statistics as st
+        ok = [c for c in outs if c.status == ST_OK] or outs
+        print(f"ttft: mean {st.mean(c.ttft_s for c in ok)*1e3:.1f} ms, "
+              f"max {max(c.ttft_s for c in ok)*1e3:.1f} ms")
+        print(f"handoff: {cs['handoffs']} migrations, "
+              f"{cs['handoff_bytes']/1e6:.2f} MB of KV pages moved, "
+              f"{cs['decode_prefill_tokens']} prompt tokens recomputed "
+              f"decode-side")
+        print(f"router: {cs['router_routed']} routed "
+              f"({cs['router_steered']} steered to a prefix owner, "
+              f"{cs['router_held']} held by backpressure), cross-worker "
+              f"prefix hit rate {cs['cross_worker_prefix_hit_rate']:.0%}, "
+              f"shard pages {cs['shard_pages']}")
+        if args.chaos is not None:
+            print(f"chaos[seed={args.chaos}]: "
+                  f"{cs['migration_faults']} handoffs dropped+retried, "
+                  f"{cs['chaos_alloc_faults']} alloc faults, "
+                  f"{cs['chaos_nan_faults']} NaN rows, "
+                  f"{cs['chaos_corrupt_faults']} corruptions injected")
+        clu.check_partition()
+    if not args.bucketed and not disagg:
         import statistics as st
         by_status: dict[str, int] = {}
         for c in outs:
@@ -183,13 +250,19 @@ def main():
                   f"{fs['corruptions_detected']} corruptions caught, "
                   f"{fs['failed']} requests failed "
                   f"({len(eng.replay_artifacts)} replay artifacts)")
-    if not args.bucketed and eng.act_report is not None:
+    if disagg and clu.act_report is not None:
+        import statistics as st
+        sq = [s for v in clu.act_report.values() for s in v]
+        print(f"act-quant: {len(sq)} (layer, site) tensors calibrated, "
+              f"mean SQNR {st.mean(sq):.1f} dB "
+              f"(sites: {', '.join(sorted(clu.act_report))})")
+    if not args.bucketed and not disagg and eng.act_report is not None:
         import statistics as st
         sq = [s for v in eng.act_report.values() for s in v]
         print(f"act-quant: {len(sq)} (layer, site) tensors calibrated, "
               f"mean SQNR {st.mean(sq):.1f} dB "
               f"(sites: {', '.join(sorted(eng.act_report))})")
-    if not args.bucketed and eng.prefix_stats is not None:
+    if not args.bucketed and not disagg and eng.prefix_stats is not None:
         ps = eng.prefix_stats
         print(f"prefix cache: {ps.hits}/{ps.queries} hits, "
               f"{ps.tokens_reused} prompt tokens served from cache "

@@ -1,6 +1,7 @@
 """Seeded chaos harness for the serving Engine: deterministic fault
-injectors at the four failure sites the single-host failure model
-defines (DESIGN.md "Failure model & request lifecycle").
+injectors at the failure sites the serving failure model defines
+(DESIGN.md "Failure model & request lifecycle"): four single-engine
+sites plus the cluster's KV-migration site.
 
 The PIM methodology literature (Oliveira et al., 2022) names robust
 system-integration/validation tooling as the gap blocking data-centric
@@ -32,6 +33,11 @@ Injection sites (wired in ``engine.Engine``):
 - **tick latency** (``tick_delay``): the scheduler sleeps, exercising
   the :class:`~repro.runtime.fault_tolerance.StragglerWatchdog` wired
   into ``Engine.step``.
+- **migration** (``migration_fault``, wired in ``runtime.cluster``):
+  a prefill->decode KV page handoff drops in transit.  The cluster
+  re-queues the request on its prefill worker; the retry re-prefills
+  (a trie hit when the prefix cache is on, since handoff retirement
+  inserted the pages) and hands off again — latency, never tokens.
 
 Determinism contract: the engine calls each injector at fixed points
 in the tick (one ``tick_delay`` per step, one ``nan_slot`` per
@@ -58,15 +64,18 @@ class ChaosConfig:
     corrupt_rate: float = 0.0      # per tick: one checksummed page flips
     slow_tick_rate: float = 0.0    # per tick: the scheduler stalls
     slow_tick_s: float = 0.05      # injected stall duration
+    migration_fail_rate: float = 0.0  # per handoff: KV transfer drops
 
     @classmethod
     def storm(cls, seed: int, *, rate: float = 0.03,
               slow_tick_s: float = 0.002) -> "ChaosConfig":
-        """All four sites live at a uniform rate — the soak preset
-        behind ``launch/serve.py --chaos <seed>``."""
+        """All five sites live at a uniform rate — the soak preset
+        behind ``launch/serve.py --chaos <seed>``.  The migration site
+        only fires on cluster (prefill/decode-disaggregated) runs —
+        single-engine serving never hands pages off."""
         return cls(seed=seed, alloc_fail_rate=rate, nan_rate=rate,
                    corrupt_rate=rate, slow_tick_rate=rate,
-                   slow_tick_s=slow_tick_s)
+                   slow_tick_s=slow_tick_s, migration_fail_rate=rate)
 
 
 class ChaosInjector:
@@ -79,6 +88,7 @@ class ChaosInjector:
         self.nan_faults = 0
         self.corrupt_faults = 0
         self.slow_ticks = 0
+        self.migration_faults = 0
 
     # ------------------------------------------------------------ sites
     def alloc_fault(self) -> bool:
@@ -110,6 +120,18 @@ class ChaosInjector:
         self.corrupt_faults += 1
         return int(pages[self.rng.integers(len(pages))])
 
+    def migration_fault(self) -> bool:
+        """One prefill->decode KV handoff: does the transfer drop?  A
+        dropped handoff re-queues the request on its prefill worker —
+        with the prefix cache on, the retry's re-prefill is a trie hit,
+        so the fault costs latency, never tokens (greedy re-sampling of
+        the first token is identical)."""
+        if self.cfg.migration_fail_rate <= 0.0:
+            return False
+        hit = bool(self.rng.random() < self.cfg.migration_fail_rate)
+        self.migration_faults += hit
+        return hit
+
     def tick_delay(self) -> float:
         """One tick: seconds of injected scheduler stall (0.0 = none)."""
         if self.cfg.slow_tick_rate <= 0.0:
@@ -125,7 +147,8 @@ class ChaosInjector:
                 "chaos_alloc_faults": self.alloc_faults,
                 "chaos_nan_faults": self.nan_faults,
                 "chaos_corrupt_faults": self.corrupt_faults,
-                "chaos_slow_ticks": self.slow_ticks}
+                "chaos_slow_ticks": self.slow_ticks,
+                "chaos_migration_faults": self.migration_faults}
 
 
 __all__ = ["ChaosConfig", "ChaosInjector"]

@@ -1,0 +1,382 @@
+"""Disaggregated serving: prefill workers, decode workers, a
+prefix-sharded router, and real KV page handoff between them.
+
+Why split the tick loop: the paper's argument is that data movement,
+not compute, prices modern workloads — and at the serving layer the
+two phases of a request move data in opposite shapes.  Prefill is a
+bandwidth-bound burst (hundreds of prompt tokens per dispatch, KV
+written once) while decode is a latency-bound steady state (one token
+per tick per sequence, KV read every tick).  Interleaving them in one
+engine makes each the other's straggler: a prompt chunk stretches the
+tick every decoding sequence waits on (ITL jitter), and idle decode
+lanes stall behind prefill admission.  The DynaNDE/NeuPIMs artifacts
+model exactly this split — a prefiller simulator feeding a decoder
+simulator — and this module is that topology live, as a single-process
+cooperative simulation with *real* page movement:
+
+- N **prefill workers**: ``Engine(role="prefill")`` each with its own
+  ``PagedKVCache`` and prefix-trie shard.  When a request's last
+  prompt chunk lands, the engine exports the KV page *content* as a
+  :class:`~repro.runtime.engine.KVHandoff` (pages + first sampled
+  token + lifecycle stamps) instead of decoding.
+- M **decode workers**: ``Engine(role="decode")`` whose requests all
+  arrive as handoffs via ``inject_prefilled`` — admission *imports*
+  the pages into the local pool (``PagedKVCache.import_slot``) and the
+  slot enters the decode loop with ``prefill_done=True``.  A decode
+  worker never runs a prefill dispatch; greedy decoding over the
+  migrated bytes is token-identical to the unified engine.
+- a front-end :class:`Router` that shards the prefix cache across the
+  prefill fleet: the *first-page content key* (the request's first
+  ``block_size`` tokens) is consistent-hashed onto a ring, so all
+  requests sharing a system prompt land on — and reuse — one worker's
+  trie, and adding a worker remaps only ~1/N of keys.  Routing is
+  prefix-aware: the router probes every shard for the request's
+  longest cached prefix (``PrefixCache.match_len``, read-only) and
+  steers to the owning worker when it beats the hash default, so the
+  fleet behaves like one shared system-prompt cache while each page
+  lives in exactly one pool.
+
+Backpressure composes per worker, unchanged from the single-engine
+ladder: the router holds a request back (``router_held``) rather than
+submit past a worker's ``max_queue``; once submitted, the worker's own
+admission/evict/preempt ladder applies.  Handoffs likewise wait in the
+decode worker's queue until its pool has room for the import.
+
+Failure model: the ``migration`` chaos site drops a handoff in
+transit.  The cluster re-queues the request on its source prefill
+worker — whose trie already holds the prompt's pages (handoff
+retirement inserts them), so the retry's "re-prefill" is a trie hit
+covering all but the final token — and it hands off again.  Greedy
+sampling makes the retried first token identical: a dropped handoff
+costs latency, never tokens, and the page-partition audit stays green
+on both sides because export copies content (ownership never
+dangles).
+
+What is simulated vs real: page content genuinely moves between pools
+(host-side copy standing in for an inter-host interconnect — the
+``handoff_bytes`` counter is what a NIC would carry); the workers
+share one Python process and one model params tree, so there is no
+serialization, clock skew, or transport failure beyond the injected
+one.  DESIGN.md "Disaggregated serving" maps each piece to its
+multi-host analogue.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import zlib
+from collections import deque
+from typing import Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.runtime.chaos import ChaosConfig, ChaosInjector
+from repro.runtime.engine import (Completion, Engine, EngineConfig,
+                                  KVHandoff, Request)
+
+
+@dataclasses.dataclass
+class ClusterConfig:
+    """Topology of the disaggregated cluster."""
+
+    prefill_workers: int = 2
+    decode_workers: int = 2
+    ring_points: int = 64         # consistent-hash virtual nodes/worker
+
+    def __post_init__(self):
+        if self.prefill_workers < 1 or self.decode_workers < 1:
+            raise ValueError(
+                f"need >= 1 worker of each role, got "
+                f"{self.prefill_workers}P/{self.decode_workers}D")
+
+
+class HashRing:
+    """Consistent hashing over worker indices.
+
+    Each worker owns ``points`` pseudo-random positions on a 32-bit
+    ring; a key maps to the first worker position at or after its
+    hash.  Adding/removing a worker remaps only the keys between its
+    points and their predecessors (~1/N of the space) — the property
+    that lets a fleet grow without re-warming every shard's trie.
+    """
+
+    def __init__(self, workers: Sequence[int], points: int = 64):
+        assert workers, "empty ring"
+        self._ring: list[tuple[int, int]] = sorted(
+            (zlib.crc32(f"worker{w}:vnode{v}".encode()), w)
+            for w in workers for v in range(points))
+
+    def owner(self, key: bytes) -> int:
+        h = zlib.crc32(key)
+        # first ring point at or after h, wrapping
+        lo, hi = 0, len(self._ring)
+        while lo < hi:
+            mid = (lo + hi) // 2
+            if self._ring[mid][0] < h:
+                lo = mid + 1
+            else:
+                hi = mid
+        return self._ring[lo % len(self._ring)][1]
+
+
+def first_page_key(prompt: np.ndarray, block_size: int) -> bytes:
+    """The trie-shard key: the request's first page worth of tokens.
+    Two prompts sharing a system prefix share their first page, so
+    they hash to the same prefill worker — whose trie then serves the
+    whole fleet's copies of that prefix."""
+    head = np.asarray(prompt[:block_size], np.int32)
+    return head.tobytes()
+
+
+@dataclasses.dataclass
+class RouterStats:
+    routed: int = 0               # requests dispatched to a prefill worker
+    hash_routed: int = 0          # placed by the consistent-hash default
+    steered: int = 0              # prefix owner beat the hash default
+    prefix_hits: int = 0          # routed to a shard holding >= 1 page
+    held: int = 0                 # held back by per-worker backpressure
+
+    @property
+    def cross_worker_hit_rate(self) -> float:
+        """Fraction of routed requests served by the fleet's sharded
+        prefix cache: their longest cached prefix lived on *some*
+        prefill worker and the router sent them there.  (A
+        round-robin front end would hit only when the rotation happens
+        to land on the caching worker — 1/N of the time.)"""
+        return self.prefix_hits / max(self.routed, 1)
+
+
+class Router:
+    """Prefix-aware front end over the prefill fleet."""
+
+    def __init__(self, prefill: Sequence[Engine], block_size: int,
+                 ring_points: int = 64):
+        self._prefill = list(prefill)
+        self._block_size = block_size
+        self.ring = HashRing(range(len(self._prefill)), ring_points)
+        self.stats = RouterStats()
+
+    def route(self, prompt: np.ndarray) -> tuple[int, int]:
+        """Pick the prefill worker for ``prompt``: the shard holding
+        its longest cached prefix, falling back to the consistent-hash
+        owner of the first-page key when nothing is cached.  Returns
+        ``(worker, cached_tokens)``.  The probe is read-only
+        (``match_len``); the owning worker's admission re-walks and
+        pins."""
+        hash_owner = self.ring.owner(
+            first_page_key(prompt, self._block_size))
+        best, best_len = hash_owner, 0
+        for w, eng in enumerate(self._prefill):
+            if eng.prefix is None:
+                continue
+            mlen = eng.prefix.match_len(prompt)
+            if mlen > best_len or (mlen == best_len and w == hash_owner):
+                best, best_len = w, mlen
+        self.stats.routed += 1
+        if best_len > 0:
+            self.stats.prefix_hits += 1
+        if best != hash_owner:
+            self.stats.steered += 1
+        else:
+            self.stats.hash_routed += 1
+        return best, best_len
+
+
+class Cluster:
+    """Prefill/decode-disaggregated serving over one model.
+
+    API mirrors :class:`~repro.runtime.engine.Engine` where it makes
+    sense — ``submit`` / ``step`` / ``run`` / ``generate`` /
+    ``pending`` — with one scheduler tick stepping every worker
+    cooperatively: route held-back work, advance prefill workers,
+    deliver (or chaos-drop) their handoffs to the least-loaded decode
+    worker, advance decode workers, harvest completions.
+    """
+
+    def __init__(self, cfg: ModelConfig, params=None, rng_seed: int = 0,
+                 quant_bits: int | None = None,
+                 act_quant: int | None = None,
+                 calib_prompts=None,
+                 cluster: ClusterConfig | None = None,
+                 engine: EngineConfig | None = None,
+                 kv_dtype="float32",
+                 chaos: ChaosConfig | ChaosInjector | None = None):
+        self.cluster_cfg = cluster or ClusterConfig()
+        cc = self.cluster_cfg
+        template = engine or EngineConfig()
+        if template.role != "unified":
+            raise ValueError("pass a role-free EngineConfig: the cluster "
+                             "assigns roles per worker")
+        # ONE seeded injector shared by every worker and the migration
+        # site: the tick loop visits workers in a fixed order, so the
+        # rng call sequence — and every injected fault — is a pure
+        # function of (code, request stream, seed), same as PR 6.
+        self.chaos: ChaosInjector | None = (
+            ChaosInjector(chaos) if isinstance(chaos, ChaosConfig) else chaos)
+
+        def worker_cfg(role: str) -> EngineConfig:
+            kw = dataclasses.asdict(template)
+            kw["role"] = role
+            if role == "decode":
+                # decode workers never prefill, so a trie would only
+                # pin retired pages nobody can match into
+                kw["prefix_cache"] = False
+            return EngineConfig(**kw)
+
+        self.prefill: list[Engine] = []
+        for i in range(cc.prefill_workers):
+            eng = Engine(cfg, params=params, rng_seed=rng_seed,
+                         quant_bits=quant_bits if params is None else None,
+                         act_quant=act_quant if params is None else None,
+                         calib_prompts=calib_prompts,
+                         engine=worker_cfg("prefill"),
+                         kv_dtype=kv_dtype, chaos=self.chaos)
+            if params is None:
+                # every worker serves the same model: quantize/calibrate
+                # once on worker 0, share the tree (single process)
+                params = eng.params
+            self.prefill.append(eng)
+        self.decode: list[Engine] = [
+            Engine(cfg, params=params, engine=worker_cfg("decode"),
+                   kv_dtype=kv_dtype, chaos=self.chaos)
+            for _ in range(cc.decode_workers)]
+        self.params = params
+        self.quant_report = self.prefill[0].quant_report
+        self.act_report = self.prefill[0].act_report
+        self.router = Router(self.prefill, template.block_size,
+                             cc.ring_points)
+
+        # router-held work: (request, forced_worker | None, submit_t | None)
+        self._backlog: deque[tuple[Request, int | None, float | None]] = (
+            deque())
+        self._done: list[Completion] = []
+        self.handoffs = 0             # KV migrations delivered
+        self.handoff_bytes = 0        # page bytes moved prefill -> decode
+        self.migration_faults = 0     # handoffs dropped by chaos
+        self.ticks = 0
+
+    # ---------------------------------------------------------------- api
+    def submit(self, request: Request) -> int:
+        """Route a request to its prefill worker (or hold it when that
+        worker's queue is at bound).  Returns the handle (uid)."""
+        self._dispatch(request, None, None)
+        return request.uid
+
+    def _dispatch(self, request: Request, forced: int | None,
+                  submit_t: float | None) -> bool:
+        """Submit to a prefill worker, honoring per-worker queue
+        bounds; ``forced`` pins the target (migration retries must
+        land on the shard holding their pages).  Returns False when
+        held back."""
+        w = forced if forced is not None else (
+            self.router.route(request.prompt)[0])
+        eng = self.prefill[w]
+        mq = eng.engine_cfg.max_queue
+        if mq is not None and eng.queue_depth >= mq:
+            self.router.stats.held += 1
+            self._backlog.append((request, w, submit_t))
+            return False
+        eng.submit(request)
+        if submit_t is not None:
+            # a migration retry keeps its original submit stamp so
+            # TTFT/deadlines stay honest across the drop
+            eng._states[request.uid].submit_t = submit_t
+        return True
+
+    @property
+    def pending(self) -> bool:
+        return (bool(self._backlog)
+                or any(e.pending for e in self.prefill)
+                or any(e.pending for e in self.decode))
+
+    def step(self) -> list[Completion]:
+        """One cluster tick.  Order matters for determinism: backlog
+        retry, prefill workers (exports land in their outboxes),
+        handoff delivery (chaos drop -> re-queue at the source), decode
+        workers, then harvest.  Returns completions that finished this
+        tick, sorted by uid."""
+        self.ticks += 1
+        for _ in range(len(self._backlog)):
+            req, forced, t0 = self._backlog.popleft()
+            if not self._dispatch(req, forced, t0):
+                break               # still full; keep FIFO order
+        for w, eng in enumerate(self.prefill):
+            if eng.pending:
+                eng.step()
+            for h in eng.take_handoffs():
+                h.source = w
+                self._deliver(h)
+        for eng in self.decode:
+            if eng.pending:
+                eng.step()
+        out: list[Completion] = []
+        for eng in self.prefill + self.decode:
+            out += eng.collect()
+        self._done += out
+        return sorted(out, key=lambda c: c.uid)
+
+    def _deliver(self, h: KVHandoff) -> None:
+        """Move a handoff to the least-loaded decode worker — or drop
+        it at the chaos migration site and re-queue the request on its
+        source prefill worker, whose trie now holds the prompt's pages
+        (retirement inserted them), making the retry a prefix hit."""
+        if self.chaos is not None and self.chaos.migration_fault():
+            self.migration_faults += 1
+            self._dispatch(h.request, h.source, h.submit_t)
+            return
+        dw = min(range(len(self.decode)),
+                 key=lambda j: (self.decode[j].live_slots
+                                + self.decode[j].queue_depth, j))
+        self.decode[dw].inject_prefilled(h)
+        self.handoffs += 1
+        self.handoff_bytes += h.nbytes
+
+    def run(self) -> list[Completion]:
+        """Drain everything; return all uncollected completions."""
+        while self.pending:
+            self.step()
+        done, self._done = self._done, []
+        return sorted(done, key=lambda c: c.uid)
+
+    def generate(self, requests: Sequence[Request]) -> list[Completion]:
+        for r in requests:
+            self.submit(r)
+        return self.run()
+
+    # ------------------------------------------------------- diagnostics
+    def check_partition(self) -> None:
+        """The page-partition audit, on every worker's pool.  Handoffs
+        never dangle ownership: export copies content, the source
+        retires into its trie, the destination allocates fresh pages —
+        so the invariant holds on both sides after every migration."""
+        for eng in self.prefill + self.decode:
+            eng.check_partition()
+
+    def stats(self) -> dict:
+        """Cluster-level counters for benches and the serve launcher."""
+        rs = self.router.stats
+        d = {
+            "ticks": self.ticks,
+            "handoffs": self.handoffs,
+            "handoff_bytes": self.handoff_bytes,
+            "migration_faults": self.migration_faults,
+            "router_routed": rs.routed,
+            "router_steered": rs.steered,
+            "router_held": rs.held,
+            "cross_worker_prefix_hit_rate": rs.cross_worker_hit_rate,
+            "prefill_tokens_computed": sum(e.prefill_tokens_computed
+                                           for e in self.prefill),
+            "decode_prefill_tokens": sum(e.prefill_tokens_computed
+                                         for e in self.decode),
+            "decode_steps": sum(e.total_decode_steps for e in self.decode),
+            "shard_pages": [e.prefix.num_pages if e.prefix is not None
+                            else 0 for e in self.prefill],
+        }
+        if self.chaos is not None:
+            d.update(self.chaos.stats())
+        return d
+
+
+__all__ = ["Cluster", "ClusterConfig", "Router", "RouterStats", "HashRing",
+           "first_page_key"]

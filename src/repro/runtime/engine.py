@@ -149,6 +149,13 @@ class Completion:
 
 SHED_POLICIES = ("reject-new", "shed-oldest")
 
+# Disaggregation roles: a "unified" engine interleaves prefill and
+# decode in one tick loop (the single-host default); a "prefill" engine
+# runs prompts only — when a request's last chunk lands it exports the
+# KV pages as a KVHandoff instead of decoding; a "decode" engine admits
+# migrated handoffs via inject_prefilled and never computes prefill.
+ENGINE_ROLES = ("unified", "prefill", "decode")
+
 
 @dataclasses.dataclass
 class EngineConfig:
@@ -165,6 +172,36 @@ class EngineConfig:
     checksum_pages: bool = False  # per-tick KV page CRC audit
     quarantine_ticks: int = 8     # lane rest after a non-finite dispatch
     replay_dir: str | None = None  # where failed-request artifacts land
+    role: str = "unified"         # unified | prefill | decode (cluster)
+
+
+@dataclasses.dataclass
+class KVHandoff:
+    """One finished prefill leaving a prefill worker: the request, the
+    tokens sampled so far (the first token, from the final chunk's
+    logits), and the raw KV page *content* in block-table order — what
+    ``PagedKVCache.import_slot`` scatters into the decode worker's pool
+    so decode starts without recomputing a single prompt token.
+    Lifecycle stamps ride along so the merged Completion reports
+    honest end-to-end TTFT/queue-wait across the worker boundary."""
+
+    request: Request
+    tokens: list[int]             # sampled so far (len 1 after prefill)
+    length: int                   # KV tokens written (== prompt length)
+    k_pages: np.ndarray           # [L, n_pages, bs, n_kv, hd]
+    v_pages: np.ndarray
+    block_size: int
+    submit_t: float = 0.0
+    admit_t: float | None = None
+    first_token_t: float | None = None
+    prefill_s: float = 0.0
+    preemptions: int = 0
+    source: int | None = None     # filled by the cluster: worker index
+
+    @property
+    def nbytes(self) -> int:
+        """Bytes a real deployment would move across the interconnect."""
+        return self.k_pages.nbytes + self.v_pages.nbytes
 
 
 _QUEUED, _RUNNING, _FINISHED = "queued", "running", "finished"
@@ -235,6 +272,9 @@ class _SeqState:
     # while the queue head stays blocked the trie only changes on
     # retire/evict events, so the per-tick re-walk is pure waste
     match_cache: tuple | None = None
+    # a migrated prefill waiting for import (decode-role admission);
+    # dropped once the page content is scattered into this pool
+    handoff: "KVHandoff | None" = None
 
     def full_prompt(self) -> np.ndarray:
         """Prompt plus tokens generated before a preemption: greedy
@@ -286,6 +326,9 @@ class Engine:
         if ec.shed_policy not in SHED_POLICIES:
             raise ValueError(f"shed_policy must be one of {SHED_POLICIES}, "
                              f"got {ec.shed_policy!r}")
+        if ec.role not in ENGINE_ROLES:
+            raise ValueError(f"role must be one of {ENGINE_ROLES}, "
+                             f"got {ec.role!r}")
         self.chaos: ChaosInjector | None = (
             ChaosInjector(chaos) if isinstance(chaos, ChaosConfig) else chaos)
         # the CRC audit is the *detector* for KV corruption: auto-arm it
@@ -342,6 +385,13 @@ class Engine:
         self.preemptions = 0
         self.admission_reorders = 0   # prefix-hits admitted past a blocked head
         self.trie_match_reuses = 0    # per-request matches served from cache
+
+        # ----------------------------------------- disaggregation (cluster)
+        self.outbox: list[KVHandoff] = []  # prefill role: exports ready
+        self.handoffs = 0             # prefill role: requests exported
+        self.handoff_bytes = 0        # KV bytes copied out for migration
+        self.imported_handoffs = 0    # decode role: migrations admitted
+        self.imported_bytes = 0       # KV bytes scattered into this pool
 
         # ------------------------------------------ lifecycle & faults
         self._clock = time.time       # injectable for deadline tests
@@ -425,6 +475,52 @@ class Engine:
             n += 1
         return n
 
+    # -------------------------------------------------- disaggregation
+    def inject_prefilled(self, handoff: KVHandoff) -> int:
+        """Accept a migrated prefill (decode-worker side of the page
+        handoff): the request enqueues carrying the exported KV page
+        content; admission *imports* the pages into this engine's pool
+        (``PagedKVCache.import_slot``) instead of prefilling, and the
+        slot enters the decode loop with ``prefill_done=True`` — zero
+        prompt tokens are ever recomputed here.  Lifecycle stamps from
+        the prefill worker carry over so the Completion reports honest
+        end-to-end latencies.  Returns the handle (uid)."""
+        req = handoff.request
+        if req.uid in self._states:
+            raise ValueError(f"duplicate uid {req.uid}")
+        if handoff.block_size != self.engine_cfg.block_size:
+            raise ValueError(
+                f"handoff block_size {handoff.block_size} != engine "
+                f"block_size {self.engine_cfg.block_size}")
+        if handoff.length + req.max_new_tokens > self.engine_cfg.max_seq_len:
+            raise ValueError(
+                f"request {req.uid}: prefilled {handoff.length} + max_new "
+                f"{req.max_new_tokens} exceeds max_seq_len "
+                f"{self.engine_cfg.max_seq_len}")
+        st = _SeqState(req, seq_no=self._seq_counter,
+                       submit_t=handoff.submit_t)
+        self._seq_counter += 1
+        st.tokens = list(handoff.tokens)
+        if st.tokens:
+            st.next_token = st.tokens[-1]
+        st.admit_t = handoff.admit_t
+        st.first_token_t = handoff.first_token_t
+        st.prefill_s = handoff.prefill_s
+        st.preemptions = handoff.preemptions
+        st.handoff = handoff
+        self._states[req.uid] = st
+        self._queue.append(st)
+        return req.uid
+
+    def take_handoffs(self) -> list[KVHandoff]:
+        """Drain the prefill-role outbox: every request whose last
+        prompt chunk landed since the previous call, with its exported
+        KV pages.  The caller (the cluster) owns delivery; a dropped
+        handoff is re-queued via ``submit`` (the state was already
+        removed here, so the uid is free again)."""
+        out, self.outbox = self.outbox, []
+        return out
+
     # ------------------------------------------------- crash recovery
     def snapshot(self) -> dict:
         """JSON-serializable record of the engine's request
@@ -455,18 +551,37 @@ class Engine:
         return {"version": 1, "requests": reqs}
 
     def restore(self, snap: dict) -> int:
-        """Rebuild bookkeeping from :meth:`snapshot` into this (idle)
-        engine: terminal requests keep their statuses/results; every
-        in-flight request re-queues to re-prefill prompt +
-        tokens-so-far from a cold cache.  Returns the number
-        re-queued.  TTFT/queue-wait stamps restart (the crash ate
-        them); deadlines keep their original submit stamp, so a budget
-        blown during the outage expires on the first tick."""
-        if self._states or self.pending:
-            raise RuntimeError("restore() needs an idle engine: build a "
-                               "fresh one for the rebuilt workload")
+        """Rebuild bookkeeping from :meth:`snapshot` into this engine:
+        terminal requests keep their statuses/results; every in-flight
+        request re-queues to re-prefill prompt + tokens-so-far.
+        Returns the number re-queued.  TTFT/queue-wait stamps restart
+        (the crash ate them); deadlines keep their original submit
+        stamp, so a budget blown during the outage expires on the
+        first tick.
+
+        The engine must have no *live* work (queued or running
+        requests), but restoring into a long-lived engine whose prefix
+        trie is warm is the intended recovery path: re-queued requests
+        go through ordinary trie-matching admission, so when the trie
+        still holds their prefixes the "re-prefill" splices cached
+        pages instead of recomputing — a crash costs the uncached tail,
+        not the whole prompt.  (Restoring into a fresh engine works too
+        and is simply cold.)  Uncollected terminal completions from
+        earlier work stay collectable; snapshot uids must not collide
+        with them."""
+        if self.pending:
+            raise RuntimeError(
+                "restore() needs an engine with no live requests: drain "
+                "or cancel in-flight work first (uncollected terminal "
+                "completions are fine — a warm prefix trie turns the "
+                "restore re-prefill into cache hits)")
         if snap.get("version") != 1:
             raise ValueError(f"unknown snapshot version {snap.get('version')}")
+        for rec in snap["requests"]:
+            if rec["uid"] in self._states:
+                raise ValueError(
+                    f"snapshot uid {rec['uid']} collides with an "
+                    f"uncollected completion; collect() first")
         requeued = 0
         for rec in snap["requests"]:
             req = Request(rec["uid"],
@@ -493,6 +608,18 @@ class Engine:
     @property
     def pending(self) -> bool:
         return bool(self._queue) or any(s is not None for s in self._slots)
+
+    @property
+    def queue_depth(self) -> int:
+        """Requests waiting for admission (the router's backpressure
+        signal: it holds work back rather than blow a worker's
+        ``max_queue``)."""
+        return len(self._queue)
+
+    @property
+    def live_slots(self) -> int:
+        """Occupied decode lanes (the router's load signal)."""
+        return sum(s is not None for s in self._slots)
 
     def step(self) -> list[Completion]:
         """One scheduler tick: expire deadlines, audit checksums,
@@ -616,20 +743,25 @@ class Engine:
         st = self._states.get(handle)
         return st.completion() if st and st.status == _FINISHED else None
 
-    def run(self) -> list[Completion]:
-        """Drain the queue, then return completions for every finished
-        request not yet collected by a previous ``run`` (including ones
-        that finished during ``step``/``stream`` driving), sorted by
-        uid.  Collected requests are pruned, so a long-lived engine
-        doesn't accumulate state and their uids become reusable."""
-        while self.pending:
-            self.step()
+    def collect(self) -> list[Completion]:
+        """Pop completions for every finished request not yet collected
+        (including ones that finished during ``step``/``stream``
+        driving), sorted by uid.  Collected requests are pruned, so a
+        long-lived engine doesn't accumulate state and their uids
+        become reusable.  The cluster calls this every tick to harvest
+        terminal requests without draining the whole engine."""
         done = [st for st in self._states.values()
                 if st.status == _FINISHED]
         for st in done:
             del self._states[st.request.uid]
         return sorted((st.completion() for st in done),
                       key=lambda c: c.uid)
+
+    def run(self) -> list[Completion]:
+        """Drain the queue, then :meth:`collect` everything finished."""
+        while self.pending:
+            self.step()
+        return self.collect()
 
     def generate(self, requests: Sequence[Request]) -> list[Completion]:
         """Batch-call convenience: submit all, drain."""
@@ -801,6 +933,28 @@ class Engine:
             st.pinned = []
         st.status = _FINISHED
         return st.completion()
+
+    def _export_handoff(self, slot: int, st: _SeqState) -> None:
+        """Prefill role: the request's last chunk landed — copy its KV
+        page content out for migration, retire the slot (pages move
+        into the trie, keeping this shard warm both for the next
+        shared-prefix request and for a cheap re-prefill if the
+        handoff drops in transit), and drop the request's state: from
+        here the handoff record owns it, and the uid becomes free for
+        a re-queue."""
+        length = int(self.cache.lengths[slot])
+        k, v = self.cache.export_slot(slot)
+        h = KVHandoff(request=st.request, tokens=list(st.tokens),
+                      length=length, k_pages=k, v_pages=v,
+                      block_size=self.engine_cfg.block_size,
+                      submit_t=st.submit_t, admit_t=st.admit_t,
+                      first_token_t=st.first_token_t,
+                      prefill_s=st.prefill_s, preemptions=st.preemptions)
+        self._retire(slot)
+        del self._states[st.request.uid]
+        self.outbox.append(h)
+        self.handoffs += 1
+        self.handoff_bytes += h.nbytes
 
     def _preempt(self, slot: int) -> None:
         """Release a running sequence's pages and re-queue it at the
@@ -1022,6 +1176,12 @@ class Engine:
             # the queue front, so a later popleft could grab the wrong
             # element
             st = self._queue.popleft()
+            if st.handoff is not None:
+                if self._place_import(st):
+                    admitted += 1
+                    continue
+                self._queue.appendleft(st)  # wait for pages
+                break
             match = (self._trie_match(st) if self.prefix is not None
                      else None)
             if self._try_place(st, match=match):
@@ -1031,6 +1191,45 @@ class Engine:
             self._admit_reordered(
                 self.engine_cfg.max_batched_prefill - admitted)
             break
+
+    def _place_import(self, st: _SeqState) -> bool:
+        """Admit a migrated prefill: make room for its pages, scatter
+        the handoff's KV content into this pool, and enter the decode
+        loop directly — ``prefill_done=True`` from the first tick, so
+        a decode worker never runs a prefill dispatch.  Returns False
+        when the pages cannot be freed (the import waits)."""
+        h = st.handoff
+        need = self.cache.blocks_for(h.length)
+        if need > self.cache.max_blocks_per_seq:
+            raise RuntimeError(
+                f"request {st.request.uid} needs {need} blocks > "
+                f"max_blocks_per_seq {self.cache.max_blocks_per_seq}")
+        # chaos: the import allocation transiently fails — the handoff
+        # stays queued for the next tick (latency, never tokens)
+        if self.chaos is not None and self.chaos.alloc_fault():
+            self.alloc_faults_absorbed += 1
+            self._chaos_blocked = True
+            return False
+        if not self._make_room(need, st.seq_no):
+            return False
+        slot = self._free_slot()
+        assert slot is not None
+        blocks = self.cache.import_slot(slot, h.length, h.k_pages,
+                                        h.v_pages)
+        st.slot, st.status = slot, _RUNNING
+        st.prefix_len = 0
+        st.prefill_pos = h.length
+        st.prefill_done = True
+        if st.admit_t is None:
+            st.admit_t = self._clock()
+        self._slots[slot] = st
+        self.imported_handoffs += 1
+        self.imported_bytes += h.nbytes
+        st.handoff = None       # content adopted; free the host copy
+        if self._checksum:
+            for page in blocks:
+                self._page_crc[page] = self.cache.page_checksum(page)
+        return True
 
     def _admit_reordered(self, budget: int) -> None:
         """Prefix-aware admission (lite): the queue head is blocked on
@@ -1148,6 +1347,10 @@ class Engine:
                 st.first_token_t = self._clock()
             if self._should_stop(st):
                 finished.append(self._retire(i))
+            elif self.engine_cfg.role == "prefill":
+                # disaggregation: this worker's job ends at the first
+                # token — export the KV pages instead of decoding
+                self._export_handoff(i, st)
         for i, pages in row_pages.items():
             if i not in faulted:    # a faulted row's pages were freed
                 for page in pages:
@@ -1155,6 +1358,7 @@ class Engine:
         return finished
 
 
-__all__ = ["Engine", "EngineConfig", "Request", "Completion",
+__all__ = ["Engine", "EngineConfig", "Request", "Completion", "KVHandoff",
            "ST_OK", "ST_CANCELLED", "ST_DEADLINE", "ST_REJECTED",
-           "ST_FAILED", "TERMINAL_STATUSES", "SHED_POLICIES"]
+           "ST_FAILED", "TERMINAL_STATUSES", "SHED_POLICIES",
+           "ENGINE_ROLES"]

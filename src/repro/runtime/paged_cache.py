@@ -261,6 +261,56 @@ class PagedKVCache:
         self.lengths[slot] = 0
         return blocks
 
+    # ------------------------------------------------------- migration
+    def export_slot(self, slot: int) -> tuple[np.ndarray, np.ndarray]:
+        """Copy a slot's KV pages out of the pool for migration to
+        another worker's cache: the disaggregation handoff unit.  The
+        result is host-resident (``np``) page *content* in block-table
+        order — ``[L, n_pages, bs, n_kv, hd]`` for K and V — exactly
+        what :meth:`import_slot` scatters into a peer pool, so the
+        decode side never recomputes prefill.  Shared (trie-pinned)
+        pages are exported too: the importing pool has no notion of
+        this pool's trie, so it gets private copies of everything.
+        Positions past ``lengths[slot]`` in the final page ride along
+        unmasked-garbage-for-unmasked-garbage; every attend masks by
+        length on both sides."""
+        blocks = self.slot_blocks[slot]
+        assert blocks, f"slot {slot} has no pages to export"
+        idx = jnp.asarray(blocks, jnp.int32)
+        k = np.asarray(self.k_pages[:, idx])
+        v = np.asarray(self.v_pages[:, idx])
+        return k, v
+
+    def import_slot(self, slot: int, length: int, k_pages: np.ndarray,
+                    v_pages: np.ndarray, *, reserved: bool = False
+                    ) -> list[int]:
+        """Adopt migrated KV content into this pool: allocate fresh
+        pages, scatter the exported bytes in, and bind the slot as if
+        it had prefilled here (owned pages, no shared set).  The
+        physical page ids differ from the exporter's — only *content*
+        and block-table order migrate, which is all the paged kernels
+        read.  Returns the newly allocated block list."""
+        assert not self.slot_blocks[slot], "slot already bound"
+        l, n, bs, kv, hd = k_pages.shape
+        el, _, ebs, ekv, ehd = self.k_pages.shape
+        assert (l, bs, kv, hd) == (el, ebs, ekv, ehd), (
+            f"page geometry mismatch: import {(l, bs, kv, hd)} vs pool "
+            f"{(el, ebs, ekv, ehd)}")
+        assert n == self.blocks_for(length), (n, length, self.block_size)
+        assert n <= self.max_blocks_per_seq, (n, self.max_blocks_per_seq)
+        blocks = self.allocator.alloc(n, reserved=reserved)
+        idx = jnp.asarray(blocks, jnp.int32)
+        self.k_pages = self.k_pages.at[:, idx].set(
+            jnp.asarray(k_pages, self.dtype))
+        self.v_pages = self.v_pages.at[:, idx].set(
+            jnp.asarray(v_pages, self.dtype))
+        self.slot_blocks[slot] = blocks
+        self.slot_shared[slot] = set()
+        self.block_tables[slot, :] = TRASH_PAGE
+        self.block_tables[slot, : n] = blocks
+        self.lengths[slot] = length
+        return blocks
+
     # ------------------------------------------------------- checksums
     def page_checksum(self, page: int) -> int:
         """CRC32 over a page's K and V bytes, all layers.  The engine's

@@ -154,6 +154,14 @@ class PrefixCache:
             break
         return out, c
 
+    def match_len(self, tokens: np.ndarray) -> int:
+        """Tokens of ``tokens`` covered by the longest cached prefix —
+        a read-only peek (no pin, no LRU touch, no stats).  The cluster
+        Router probes every prefill worker's trie with this to find the
+        shard owning a request's longest prefix; the owning worker's
+        own admission then re-walks (and pins) through :meth:`match`."""
+        return self.match(tokens)[1]
+
     def pin(self, nodes: Sequence[PrefixNode]) -> None:
         """Take a read reference on each matched page (refcount++), and
         freshen its LRU stamp — pinned pages cannot be evicted."""

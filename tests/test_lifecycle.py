@@ -330,14 +330,115 @@ class TestSnapshotRestore:
             assert by[r.uid].status == ST_OK
             np.testing.assert_array_equal(by[r.uid].tokens, ref[r.uid])
 
-    def test_restore_requires_idle_engine(self):
+    def test_restore_requires_no_live_requests(self):
         cfg = tiny_cfg()
         eng = Engine(cfg, engine=EngineConfig(num_slots=1, block_size=8,
                                               max_seq_len=64))
         eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=2))
         snap = eng.snapshot()
-        with pytest.raises(RuntimeError, match="idle"):
+        with pytest.raises(RuntimeError, match="live requests"):
             eng.restore(snap)
+
+    def test_restore_rejects_uid_collision(self):
+        """Uncollected terminal completions no longer block restore —
+        but a snapshot uid clashing with one must (collect() first)."""
+        cfg = tiny_cfg()
+        ec = EngineConfig(num_slots=1, block_size=8, max_seq_len=64)
+        eng = Engine(cfg, engine=ec)
+        eng.submit(Request(0, prompt(cfg, 8), max_new_tokens=2))
+        while eng.pending:
+            eng.step()                  # uid 0 now terminal, uncollected
+        other = Engine(cfg, params=eng.params, engine=ec)
+        other.submit(Request(0, prompt(cfg, 8, seed=1), max_new_tokens=2))
+        snap = other.snapshot()
+        with pytest.raises(ValueError, match="collides"):
+            eng.restore(snap)
+        eng.collect()                   # clears the collision
+        assert eng.restore(snap) == 1
+        drain_checked(eng)
+
+    def test_restore_into_warm_trie_reuses_cached_pages(self):
+        """The restore re-prefill rides the prefix cache: restoring
+        onto an engine whose trie already holds the snapshot prompts'
+        pages (e.g. the same engine after a mid-flight fault, or a warm
+        standby) serves the recompute from the trie instead of
+        prefilling cold — and stays token-identical."""
+        cfg = tiny_cfg()
+        ec = EngineConfig(num_slots=2, block_size=8, max_seq_len=96,
+                          prefill_chunk=16)
+        reqs = [Request(i, prompt(cfg, 32, seed=i), max_new_tokens=6)
+                for i in range(2)]
+        base = Engine(cfg, engine=ec)
+        ref = {c.uid: c.tokens
+               for c in base.generate([Request(r.uid, r.prompt,
+                                               r.max_new_tokens)
+                                       for r in reqs])}
+
+        eng = Engine(cfg, params=base.params, engine=ec)
+        # warm the trie: serve the same prompts once (retire inserts
+        # their pages), collect so no uids linger
+        eng.generate([Request(10 + r.uid, r.prompt, r.max_new_tokens)
+                      for r in reqs])
+        reused0 = eng.prefix_stats.tokens_reused
+        for r in reqs:
+            eng.submit(r)
+        eng.step()
+        snap = eng.snapshot()
+        # same engine carries on after the "fault": live state is
+        # dropped by the snapshot contract, the trie survives
+        eng.cancel(reqs[0].uid)
+        eng.cancel(reqs[1].uid)
+        while eng.pending:
+            eng.step()
+        eng.collect()
+        assert eng.restore(snap) == 2
+        out = drain_checked(eng)
+        for r in reqs:
+            c = next(c for c in out if c.uid == r.uid)
+            np.testing.assert_array_equal(c.tokens, ref[r.uid])
+        # the recompute was served from the trie, not prefilled cold
+        assert eng.prefix_stats.tokens_reused > reused0
+
+    def test_snapshot_restore_with_act_quant_and_prefix_cache(
+            self, tmp_path, monkeypatch):
+        """Crash recovery composes with DNA-TEQ activation codes AND
+        the prefix cache enabled together: the restored engine
+        re-prefills with the act-quant tables spliced into its params,
+        splices trie pages where they exist, and finishes
+        token-identical to the uninterrupted act-quant run."""
+        monkeypatch.setenv("REPRO_ACT_CALIB_CACHE",
+                           str(tmp_path / "act_calib.json"))
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "tune.json"))
+        cfg = tiny_cfg(d_ff=192, vocab_size=128)
+        ec = EngineConfig(num_slots=2, block_size=8, max_seq_len=96,
+                          prefill_chunk=16, prefix_cache=True)
+        reqs = [Request(i, prompt(cfg, 16 + 8 * (i % 2), seed=i),
+                        max_new_tokens=5) for i in range(3)]
+        base = Engine(cfg, quant_bits=7, act_quant=7, engine=ec)
+        assert base.act_report is not None and base.prefix is not None
+        ref = {c.uid: c.tokens
+               for c in base.generate([Request(r.uid, r.prompt,
+                                               r.max_new_tokens)
+                                       for r in reqs])}
+
+        eng = Engine(cfg, params=base.params, act_quant=7, engine=ec)
+        for r in reqs:
+            eng.submit(r)
+        for _ in range(3):              # mixed prefill/decode/queued
+            eng.step()
+        snap = eng.snapshot()
+        del eng                         # the "crash"
+
+        eng2 = Engine(cfg, params=base.params, act_quant=7, engine=ec)
+        assert eng2.restore(snap) == 3
+        out = drain_checked(eng2)
+        assert {c.uid: c.status for c in out} == \
+            {r.uid: ST_OK for r in reqs}
+        for c in out:
+            np.testing.assert_array_equal(c.tokens, ref[c.uid])
+        # both features were genuinely live through the recovery
+        assert eng2.prefix.stats.inserted_pages > 0
 
     def test_snapshot_is_json_serializable(self):
         import json
