@@ -662,6 +662,135 @@ def disagg_rows() -> list[dict]:
     ]
 
 
+# ---------------------------------------------------------------------
+# Telemetry-overhead scenario (BENCH_serving.json, telemetry/*): the
+# disagg stream run twice on identical 2P/2D clusters — once untraced,
+# once with full span tracing armed — timed best-of-3 each.  The traced
+# run must stay within 5% of the untraced tok/s (the observability
+# overhead budget; asserted, not just reported) and token-identical.
+# The last traced repeat's Chrome-trace document is validated
+# (per-track monotonic, spans nest, flows pair, >=1 request crossing
+# the prefill->decode worker boundary) and written to
+# TRACE_disagg.json, with a registry snapshot in METRICS_disagg.jsonl
+# — the artifacts the CI trace-validation step loads.
+# ---------------------------------------------------------------------
+
+def telemetry_rows() -> list[dict]:
+    from repro.configs import get_config
+    from repro.runtime.cluster import Cluster, ClusterConfig
+    from repro.runtime.engine import EngineConfig, Request
+    from repro.runtime.telemetry import Telemetry, validate_chrome_trace
+
+    cfg = get_config("qwen3-1.7b", tiny=True).replace(
+        num_layers=2, d_model=64, d_ff=192, compute_dtype="float32")
+    rng = np.random.default_rng(0)
+    sys_len, tail_len, max_new, n_req = 48, 24, 8, 12
+    sys_ps = [rng.integers(0, cfg.vocab_size, sys_len).astype(np.int32)
+              for _ in range(2)]
+    prompts = [np.concatenate(
+        [sys_ps[i % 2],
+         rng.integers(0, cfg.vocab_size, tail_len).astype(np.int32)])
+        for i in range(n_req)]
+    clone = lambda: [Request(i, prompts[i], max_new_tokens=max_new)
+                     for i in range(n_req)]
+    ecfg = lambda: EngineConfig(num_slots=4, block_size=16,
+                                max_seq_len=sys_len + tail_len + max_new,
+                                prefill_chunk=32)
+    ccfg = lambda: ClusterConfig(prefill_workers=2, decode_workers=2)
+
+    def waves(submit, run):
+        out = []
+        rs = clone()
+        for r in rs[:4]:
+            submit(r)
+        out += run()
+        for r in rs[4:]:
+            submit(r)
+        out += run()
+        return sorted(out, key=lambda c: c.uid)
+
+    def best_of(clu, before_run=None, repeats=3):
+        best, last = float("inf"), None
+        for _ in range(repeats):
+            if before_run is not None:
+                before_run()
+            t0 = time.perf_counter()
+            last = waves(clu.submit, clu.run)
+            best = min(best, time.perf_counter() - t0)
+        return best, last
+
+    plain = Cluster(cfg, cluster=ccfg(), engine=ecfg())
+    waves(plain.submit, plain.run)                    # warm the compiles
+    plain_dt, plain_out = best_of(plain)
+
+    tel = Telemetry(tracing=True)
+    traced = Cluster(cfg, params=plain.params, cluster=ccfg(),
+                     engine=ecfg(), telemetry=tel)
+    waves(traced.submit, traced.run)                  # warm
+
+    def reset_trace():
+        # uids repeat across repeats; keep exactly the final repeat's
+        # events so the exported document has one request span per uid
+        tel.tracer.events.clear()
+        tel.tracer.dropped = 0
+        tel.traces.clear()
+
+    traced_dt, traced_out = best_of(traced, before_run=reset_trace)
+
+    doc = tel.tracer.export("TRACE_disagg.json")
+    tstats = validate_chrome_trace(doc, require_boundary=True)
+    tel.registry.dump_jsonl("METRICS_disagg.jsonl",
+                            label="bench-telemetry")
+    for tr in tel.traces.values():
+        tr.assert_monotonic()
+
+    agree = float(np.mean([np.mean(a.tokens == b.tokens)
+                           for a, b in zip(plain_out, traced_out)]))
+    assert agree == 1.0, f"tracing changed tokens: agreement {agree}"
+    un_tok_s = sum(len(c.tokens) for c in plain_out) / plain_dt
+    tr_tok_s = sum(len(c.tokens) for c in traced_out) / traced_dt
+    overhead = 1.0 - tr_tok_s / un_tok_s
+    assert tr_tok_s >= 0.95 * un_tok_s, (
+        f"tracing overhead {overhead:.1%} exceeds the 5% budget "
+        f"({tr_tok_s:.1f} vs {un_tok_s:.1f} tok/s)")
+    reg = tel.registry
+    return [
+        {"name": "telemetry/untraced_tok_s", "tok_s": un_tok_s,
+         "derived": "2P/2D cluster, tracing disarmed (best of 3)"},
+        {"name": "telemetry/traced_tok_s", "tok_s": tr_tok_s,
+         "derived": "same cluster + stream with full span tracing "
+                    "(best of 3); asserted >= 0.95x untraced"},
+        {"name": "telemetry/trace_overhead_frac", "value": overhead,
+         "derived": "1 - traced/untraced tok_s; budget is < 0.05"},
+        {"name": "telemetry/token_agreement", "value": agree,
+         "derived": "traced vs untraced cluster, greedy tokens "
+                    "(asserted == 1.0: observation never perturbs)"},
+        {"name": "telemetry/trace_events", "value": tstats["events"],
+         "derived": "Chrome-trace events in TRACE_disagg.json "
+                    "(one traced repeat of the 12-request stream)"},
+        {"name": "telemetry/trace_spans", "value": tstats["spans"],
+         "derived": "complete (ph=X) spans across worker + request "
+                    "tracks"},
+        {"name": "telemetry/boundary_requests",
+         "value": tstats["boundary_requests"],
+         "derived": "request uids with spans on >=2 worker processes "
+                    "(prefill->decode handoff made the timeline "
+                    "contiguous across the boundary)"},
+        {"name": "telemetry/handoff_flows", "value": tstats["flows"],
+         "derived": "paired flow-start/flow-end arrows linking each "
+                    "KV export to its import"},
+        {"name": "telemetry/handoffs",
+         "value": reg.value("cluster.handoff.delivered"),
+         "derived": "registry-read KV migrations (warm + 3 repeats)"},
+        {"name": "telemetry/registry_keys", "value": len(reg.keys()),
+         "derived": "metrics registered across 4 workers + router + "
+                    "cluster (one store, namespaced views)"},
+        {"name": "telemetry/archived_traces", "value": len(tel.traces),
+         "derived": "finished per-request span records held by the "
+                    "Telemetry hub (one per uid in the last repeat)"},
+    ]
+
+
 def main(out_path: str = "BENCH_kernels.json") -> None:
     out = {"host_backend": jax.default_backend(),
            "rows": kernel_rows() + actquant_rows()}
@@ -683,6 +812,7 @@ SERVING_SCENARIOS = {
     "longprompt": longprompt_rows,
     "overload": overload_rows,
     "disagg": disagg_rows,
+    "telemetry": telemetry_rows,
 }
 
 

@@ -20,6 +20,16 @@ queue, and ``--chaos <seed>`` arms the seeded fault injectors at every
 site (ChaosConfig.storm).  Ctrl-C drains gracefully: running slots
 finish their tokens, still-queued requests complete with
 ``status=rejected``, and every submitted request stays accounted for.
+
+Observability: ``--trace PATH`` arms per-request span tracing and
+writes a Chrome-trace/Perfetto JSON on exit (load it in
+https://ui.perfetto.dev — one track per worker, one row per slot lane,
+one row per request, counter tracks for queue depth/free pages/tok-s);
+``--metrics-json PATH`` appends a snapshot of the full metrics
+registry as one JSONL line.  Both dump on SIGINT too (the partial
+trace of an interrupted run is exactly what a hang post-mortem needs),
+and the end-of-run stats printout is a render of the same registry the
+dumps come from.
 """
 
 from __future__ import annotations
@@ -36,6 +46,7 @@ from repro.runtime.cluster import Cluster, ClusterConfig
 from repro.runtime.engine import (Engine, EngineConfig, Request, ST_OK,
                                   SHED_POLICIES)
 from repro.runtime.server import InferenceServer
+from repro.runtime.telemetry import Telemetry
 
 
 def main():
@@ -89,6 +100,13 @@ def main():
     ap.add_argument("--decode-workers", type=int, default=0,
                     help="disaggregated cluster: decode-only workers "
                          "admitting migrated KV pages (0 = unified engine)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="arm request tracing and write a Chrome-trace/"
+                         "Perfetto JSON here on exit or SIGINT "
+                         "(engine/cluster paths)")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="append a JSONL snapshot of the metrics "
+                         "registry here on exit or SIGINT")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, tiny=args.tiny)
@@ -107,6 +125,24 @@ def main():
     disagg = args.prefill_workers > 0 or args.decode_workers > 0
     if disagg and args.bucketed:
         ap.error("--bucketed and --prefill/--decode-workers are exclusive")
+    if args.bucketed and (args.trace or args.metrics_json):
+        print("note: --trace/--metrics-json apply to the engine and "
+              "cluster paths only; the bucketed baseline is untraced")
+
+    # one telemetry bundle for the whole run: the stats printout below,
+    # the --metrics-json snapshot, and the --trace timeline are all
+    # views of this registry/tracer
+    tel = Telemetry(tracing=args.trace is not None)
+
+    def dump_telemetry(label: str) -> None:
+        if args.trace:
+            doc = tel.tracer.export(args.trace)
+            print(f"trace: {len(doc['traceEvents'])} events -> "
+                  f"{args.trace} (load in ui.perfetto.dev)")
+        if args.metrics_json:
+            tel.registry.dump_jsonl(args.metrics_json, label=label)
+            print(f"metrics: {len(tel.registry.keys())} keys -> "
+                  f"{args.metrics_json}")
 
     if disagg:
         clu = Cluster(
@@ -114,6 +150,7 @@ def main():
             kv_dtype=args.kv_dtype,
             chaos=(None if args.chaos is None
                    else ChaosConfig.storm(args.chaos)),
+            telemetry=tel,
             cluster=ClusterConfig(
                 prefill_workers=max(args.prefill_workers, 1),
                 decode_workers=max(args.decode_workers, 1)),
@@ -128,7 +165,13 @@ def main():
                                 max_queue=args.max_queue,
                                 shed_policy=args.shed_policy))
         t0 = time.time()
-        outs = clu.generate(reqs)
+        try:
+            outs = clu.generate(reqs)
+        except KeyboardInterrupt:
+            # SIGINT mid-run: the partial trace/metrics ARE the
+            # post-mortem — dump before propagating
+            dump_telemetry("cluster-interrupted")
+            raise
         dt = time.time() - t0
         quant_report = clu.quant_report
         cs = clu.stats()
@@ -156,6 +199,7 @@ def main():
             kv_dtype=args.kv_dtype,
             chaos=(None if args.chaos is None
                    else ChaosConfig.storm(args.chaos)),
+            telemetry=tel,
             engine=EngineConfig(num_slots=args.slots,
                                 block_size=args.block_size,
                                 max_seq_len=max(args.max_len,
@@ -191,6 +235,11 @@ def main():
                     drained = True
                 eng.step()
             outs = eng.run()
+        except KeyboardInterrupt:
+            # hard abort (second ^C): the partial trace/metrics ARE
+            # the post-mortem — dump before propagating
+            dump_telemetry("engine-aborted")
+            raise
         finally:
             signal.signal(signal.SIGINT, prev)
         dt = time.time() - t0
@@ -202,26 +251,17 @@ def main():
     tokens = sum(len(c.tokens) for c in outs)
     print(f"served {len(outs)} requests, {tokens} tokens in {dt:.2f}s "
           f"({tokens/dt:.1f} tok/s) — {label}")
+    # stats printout = a render of the metrics registry: the same
+    # store --metrics-json snapshots and every counter lives in —
+    # no more hand-maintained f-string blocks drifting from the code
     if disagg:
         import statistics as st
         ok = [c for c in outs if c.status == ST_OK] or outs
         print(f"ttft: mean {st.mean(c.ttft_s for c in ok)*1e3:.1f} ms, "
               f"max {max(c.ttft_s for c in ok)*1e3:.1f} ms")
-        print(f"handoff: {cs['handoffs']} migrations, "
-              f"{cs['handoff_bytes']/1e6:.2f} MB of KV pages moved, "
-              f"{cs['decode_prefill_tokens']} prompt tokens recomputed "
-              f"decode-side")
-        print(f"router: {cs['router_routed']} routed "
-              f"({cs['router_steered']} steered to a prefix owner, "
-              f"{cs['router_held']} held by backpressure), cross-worker "
-              f"prefix hit rate {cs['cross_worker_prefix_hit_rate']:.0%}, "
-              f"shard pages {cs['shard_pages']}")
-        if args.chaos is not None:
-            print(f"chaos[seed={args.chaos}]: "
-                  f"{cs['migration_faults']} handoffs dropped+retried, "
-                  f"{cs['chaos_alloc_faults']} alloc faults, "
-                  f"{cs['chaos_nan_faults']} NaN rows, "
-                  f"{cs['chaos_corrupt_faults']} corruptions injected")
+        for prefix in ("cluster.", "router.") + (
+                ("chaos.",) if args.chaos is not None else ()):
+            print(tel.registry.render(prefix))
         clu.check_partition()
     if not args.bucketed and not disagg:
         import statistics as st
@@ -232,24 +272,14 @@ def main():
             print("statuses: " + ", ".join(
                 f"{k}={v}" for k, v in sorted(by_status.items())))
         ok = [c for c in outs if c.status == ST_OK] or outs
-        fs = eng.fault_stats()
         print(f"ttft: mean {st.mean(c.ttft_s for c in ok)*1e3:.1f} ms, "
               f"max {max(c.ttft_s for c in ok)*1e3:.1f} ms; queue wait "
-              f"mean {st.mean(c.queue_wait_s for c in ok)*1e3:.1f} ms "
-              f"({eng.prefill_batches} chunked prefill dispatches, "
-              f"{eng.admission_reorders} prefix-aware reorders, "
-              f"{eng.trie_match_reuses} trie-match reuses)")
-        print(f"ticks: {fs['ticks']} "
-              f"(p50 {fs['tick_p50_s']*1e3:.1f} ms, "
-              f"p99 {fs['tick_p99_s']*1e3:.1f} ms, "
-              f"{fs['slow_ticks']} watchdog-flagged)")
+              f"mean {st.mean(c.queue_wait_s for c in ok)*1e3:.1f} ms")
+        print(tel.registry.render("engine."))
         if args.chaos is not None:
-            print(f"chaos[seed={args.chaos}]: "
-                  f"{fs['alloc_faults_absorbed']} alloc faults absorbed, "
-                  f"{fs['nan_rows_detected']} NaN rows quarantined, "
-                  f"{fs['corruptions_detected']} corruptions caught, "
-                  f"{fs['failed']} requests failed "
-                  f"({len(eng.replay_artifacts)} replay artifacts)")
+            print(tel.registry.render("chaos."))
+            if eng.replay_artifacts:
+                print(f"replay artifacts: {len(eng.replay_artifacts)}")
     if disagg and clu.act_report is not None:
         import statistics as st
         sq = [s for v in clu.act_report.values() for s in v]
@@ -262,18 +292,14 @@ def main():
         print(f"act-quant: {len(sq)} (layer, site) tensors calibrated, "
               f"mean SQNR {st.mean(sq):.1f} dB "
               f"(sites: {', '.join(sorted(eng.act_report))})")
-    if not args.bucketed and not disagg and eng.prefix_stats is not None:
-        ps = eng.prefix_stats
-        print(f"prefix cache: {ps.hits}/{ps.queries} hits, "
-              f"{ps.tokens_reused} prompt tokens served from cache "
-              f"({ps.token_hit_rate:.0%}), {ps.evicted_pages} evicted, "
-              f"{eng.preemptions} preemptions")
     if quant_report:
         import statistics as st
         bits = [b for b, _ in quant_report.values()]
         sqnr = [s for _, s in quant_report.values()]
         print(f"quantized {len(bits)} tensors, avg bits {st.mean(bits):.2f}, "
               f"avg SQNR {st.mean(sqnr):.1f} dB")
+    if not args.bucketed:
+        dump_telemetry(label)
 
 
 if __name__ == "__main__":

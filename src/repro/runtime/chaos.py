@@ -142,7 +142,27 @@ class ChaosInjector:
         return self.cfg.slow_tick_s
 
     # ------------------------------------------------------------ stats
+    def bind_metrics(self, registry) -> None:
+        """Register this injector's fire counters as callback gauges
+        under root-level ``chaos.*`` keys (no worker prefix: one
+        injector is shared by every worker in a cluster, so its
+        counts are fleet-wide by construction).  Registration is
+        get-or-create, so each worker binding the shared injector is
+        idempotent.  ``registry`` is duck-typed (a
+        ``telemetry.MetricsRegistry``) — this module stays importable
+        without the telemetry machinery."""
+        registry.gauge("chaos.seed", lambda: self.cfg.seed)
+        registry.gauge("chaos.alloc_faults", lambda: self.alloc_faults)
+        registry.gauge("chaos.nan_faults", lambda: self.nan_faults)
+        registry.gauge("chaos.corrupt_faults", lambda: self.corrupt_faults)
+        registry.gauge("chaos.slow_ticks", lambda: self.slow_ticks)
+        registry.gauge("chaos.migration_faults",
+                       lambda: self.migration_faults)
+
     def stats(self) -> dict:
+        """Legacy dict view (deprecated in favor of the ``chaos.*``
+        registry gauges bound by :meth:`bind_metrics`); the key shape
+        is frozen for existing consumers."""
         return {"chaos_seed": self.cfg.seed,
                 "chaos_alloc_faults": self.alloc_faults,
                 "chaos_nan_faults": self.nan_faults,

@@ -74,6 +74,7 @@ from repro.configs.base import ModelConfig
 from repro.runtime.chaos import ChaosConfig, ChaosInjector
 from repro.runtime.engine import (Completion, Engine, EngineConfig,
                                   KVHandoff, Request)
+from repro.runtime.telemetry import SCHED_TID, Telemetry, Trace
 
 
 @dataclasses.dataclass
@@ -201,9 +202,15 @@ class Cluster:
                  cluster: ClusterConfig | None = None,
                  engine: EngineConfig | None = None,
                  kv_dtype="float32",
-                 chaos: ChaosConfig | ChaosInjector | None = None):
+                 chaos: ChaosConfig | ChaosInjector | None = None,
+                 telemetry: Telemetry | None = None):
         self.cluster_cfg = cluster or ClusterConfig()
         cc = self.cluster_cfg
+        # ONE telemetry bundle for the whole fleet: every worker stamps
+        # traces on the same monotonic clock (handoff-crossing spans
+        # are provably ordered) and registers metrics into the same
+        # store under a per-worker prefix (prefill0., decode1., ...)
+        self.telemetry = telemetry or Telemetry()
         template = engine or EngineConfig()
         if template.role != "unified":
             raise ValueError("pass a role-free EngineConfig: the cluster "
@@ -231,7 +238,9 @@ class Cluster:
                          act_quant=act_quant if params is None else None,
                          calib_prompts=calib_prompts,
                          engine=worker_cfg("prefill"),
-                         kv_dtype=kv_dtype, chaos=self.chaos)
+                         kv_dtype=kv_dtype, chaos=self.chaos,
+                         telemetry=self.telemetry,
+                         worker_name=f"prefill{i}", worker_id=i)
             if params is None:
                 # every worker serves the same model: quantize/calibrate
                 # once on worker 0, share the tree (single process)
@@ -239,49 +248,74 @@ class Cluster:
             self.prefill.append(eng)
         self.decode: list[Engine] = [
             Engine(cfg, params=params, engine=worker_cfg("decode"),
-                   kv_dtype=kv_dtype, chaos=self.chaos)
-            for _ in range(cc.decode_workers)]
+                   kv_dtype=kv_dtype, chaos=self.chaos,
+                   telemetry=self.telemetry, worker_name=f"decode{j}",
+                   worker_id=cc.prefill_workers + j)
+            for j in range(cc.decode_workers)]
         self.params = params
         self.quant_report = self.prefill[0].quant_report
         self.act_report = self.prefill[0].act_report
         self.router = Router(self.prefill, template.block_size,
                              cc.ring_points)
 
-        # router-held work: (request, forced_worker | None, submit_t | None)
-        self._backlog: deque[tuple[Request, int | None, float | None]] = (
+        # router-held work:
+        # (request, forced_worker | None, submit_t | None, trace | None)
+        self._backlog: deque[
+            tuple[Request, int | None, float | None, Trace | None]] = (
             deque())
         self._done: list[Completion] = []
-        self.handoffs = 0             # KV migrations delivered
-        self.handoff_bytes = 0        # page bytes moved prefill -> decode
-        self.migration_faults = 0     # handoffs dropped by chaos
-        self.ticks = 0
+        # cluster counters live in the shared registry (root keys, no
+        # worker prefix); the attribute names are properties over them
+        # — see _CLUSTER_COUNTERS below the class body
+        reg = self.telemetry.registry
+        self._c = {attr: reg.counter(key, help=hint)
+                   for attr, (key, hint) in _CLUSTER_COUNTERS.items()}
+        rs = self.router.stats
+        reg.gauge("router.routed", lambda: rs.routed)
+        reg.gauge("router.hash_routed", lambda: rs.hash_routed)
+        reg.gauge("router.steered", lambda: rs.steered)
+        reg.gauge("router.prefix_hits", lambda: rs.prefix_hits)
+        reg.gauge("router.held", lambda: rs.held)
+        reg.gauge("router.cross_worker_hit_rate",
+                  lambda: rs.cross_worker_hit_rate)
+        reg.gauge("cluster.backlog.depth", lambda: len(self._backlog))
 
     # ---------------------------------------------------------------- api
     def submit(self, request: Request) -> int:
         """Route a request to its prefill worker (or hold it when that
         worker's queue is at bound).  Returns the handle (uid)."""
-        self._dispatch(request, None, None)
+        self._dispatch(request, None, None, None)
         return request.uid
 
     def _dispatch(self, request: Request, forced: int | None,
-                  submit_t: float | None) -> bool:
+                  submit_t: float | None,
+                  trace: Trace | None) -> bool:
         """Submit to a prefill worker, honoring per-worker queue
         bounds; ``forced`` pins the target (migration retries must
-        land on the shard holding their pages).  Returns False when
-        held back."""
+        land on the shard holding their pages) and ``trace`` carries a
+        retried request's timeline so the drop shows up as stamps on
+        ONE contiguous trace instead of a fresh one.  Returns False
+        when held back."""
         w = forced if forced is not None else (
             self.router.route(request.prompt)[0])
         eng = self.prefill[w]
         mq = eng.engine_cfg.max_queue
         if mq is not None and eng.queue_depth >= mq:
             self.router.stats.held += 1
-            self._backlog.append((request, w, submit_t))
+            self._backlog.append((request, w, submit_t, trace))
             return False
         eng.submit(request)
+        st = eng._states[request.uid]
         if submit_t is not None:
             # a migration retry keeps its original submit stamp so
             # TTFT/deadlines stay honest across the drop
-            eng._states[request.uid].submit_t = submit_t
+            st.submit_t = submit_t
+        if trace is not None:
+            st.trace = trace        # continue the retried timeline
+        if st.trace is not None:
+            st.trace.stamp("route", self.telemetry.clock(),
+                           worker=f"prefill{w}",
+                           forced=forced is not None)
         return True
 
     @property
@@ -298,8 +332,8 @@ class Cluster:
         tick, sorted by uid."""
         self.ticks += 1
         for _ in range(len(self._backlog)):
-            req, forced, t0 = self._backlog.popleft()
-            if not self._dispatch(req, forced, t0):
+            req, forced, t0, tr = self._backlog.popleft()
+            if not self._dispatch(req, forced, t0, tr):
                 break               # still full; keep FIFO order
         for w, eng in enumerate(self.prefill):
             if eng.pending:
@@ -323,7 +357,17 @@ class Cluster:
         (retirement inserted them), making the retry a prefix hit."""
         if self.chaos is not None and self.chaos.migration_fault():
             self.migration_faults += 1
-            self._dispatch(h.request, h.source, h.submit_t)
+            tr = h.trace
+            if tr is not None:
+                t = self.telemetry.clock()
+                tr.stamp("handoff_dropped", t, source=h.source)
+                # close the export's flow arrow at the drop site: every
+                # flow stays 1:1 paired, and the timeline shows WHERE
+                # the transfer died (the retry export opens a new one)
+                self.telemetry.tracer.flow_end(
+                    h.source, SCHED_TID, "kv_handoff", h.flow_id, t,
+                    uid=int(h.request.uid), dropped=True)
+            self._dispatch(h.request, h.source, h.submit_t, tr)
             return
         dw = min(range(len(self.decode)),
                  key=lambda j: (self.decode[j].live_slots
@@ -354,7 +398,13 @@ class Cluster:
             eng.check_partition()
 
     def stats(self) -> dict:
-        """Cluster-level counters for benches and the serve launcher."""
+        """Cluster-level counters for benches and the serve launcher.
+
+        Deprecation shim: every value is a read of the shared metrics
+        registry (``cluster.*`` / ``router.*`` keys plus per-worker
+        ``prefill{i}.engine.*`` sums) — the dict shape is frozen so
+        existing consumers don't churn; new code should read
+        ``Cluster.telemetry.registry`` directly."""
         rs = self.router.stats
         d = {
             "ticks": self.ticks,
@@ -376,6 +426,33 @@ class Cluster:
         if self.chaos is not None:
             d.update(self.chaos.stats())
         return d
+
+
+# Cluster counters live in the fleet's shared metrics registry under
+# root-level keys; the attribute names stay as int-valued properties
+# over them (same pattern as Engine's `_ENGINE_COUNTERS`).
+_CLUSTER_COUNTERS = {
+    "ticks": ("cluster.ticks", "cluster scheduler ticks run"),
+    "handoffs": ("cluster.handoff.delivered", "KV migrations delivered"),
+    "handoff_bytes":
+        ("cluster.handoff.bytes", "page bytes moved prefill -> decode"),
+    "migration_faults":
+        ("cluster.handoff.dropped", "handoffs dropped by chaos"),
+}
+
+
+def _install_counter_views(cls, mapping) -> None:
+    for attr in mapping:
+        def _get(self, _a=attr):
+            return self._c[_a].value
+
+        def _set(self, v, _a=attr):
+            self._c[_a]._value = int(v)
+
+        setattr(cls, attr, property(_get, _set))
+
+
+_install_counter_views(Cluster, _CLUSTER_COUNTERS)
 
 
 __all__ = ["Cluster", "ClusterConfig", "Router", "RouterStats", "HashRing",

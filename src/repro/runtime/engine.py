@@ -115,6 +115,8 @@ from repro.runtime.chaos import ChaosConfig, ChaosInjector
 from repro.runtime.fault_tolerance import LatencyTracker, StragglerWatchdog
 from repro.runtime.paged_cache import TRASH_PAGE, PagedKVCache
 from repro.runtime.prefix_cache import PrefixCache, PrefixNode
+from repro.runtime.telemetry import (REQUESTS_PID, SCHED_TID, FlightRecorder,
+                                     Telemetry, Trace, lane_tid)
 
 # Terminal statuses: every request ends in exactly one of these.
 ST_OK = "ok"
@@ -197,6 +199,11 @@ class KVHandoff:
     prefill_s: float = 0.0
     preemptions: int = 0
     source: int | None = None     # filled by the cluster: worker index
+    # the request's Trace rides the handoff, so its timeline stays
+    # contiguous across the prefill->decode worker boundary; flow_id
+    # pairs the export-side trace arrow with the import side
+    trace: Trace | None = None
+    flow_id: int = 0
 
     @property
     def nbytes(self) -> int:
@@ -275,6 +282,7 @@ class _SeqState:
     # a migrated prefill waiting for import (decode-role admission);
     # dropped once the page content is scattered into this pool
     handoff: "KVHandoff | None" = None
+    trace: Trace | None = None    # per-request stamp timeline
 
     def full_prompt(self) -> np.ndarray:
         """Prompt plus tokens generated before a preemption: greedy
@@ -311,7 +319,9 @@ class Engine:
                  calib_prompts=None,
                  engine: EngineConfig | None = None,
                  kv_dtype: str | jnp.dtype = "float32",
-                 chaos: ChaosConfig | ChaosInjector | None = None):
+                 chaos: ChaosConfig | ChaosInjector | None = None,
+                 telemetry: Telemetry | None = None,
+                 worker_name: str = "", worker_id: int = 0):
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         if not self.supports(cfg):
@@ -379,42 +389,80 @@ class Engine:
         self._slots: list[_SeqState | None] = [None] * ec.num_slots
         self._states: dict[int, _SeqState] = {}
         self._seq_counter = 0
-        self.total_decode_steps = 0
-        self.prefill_tokens_computed = 0
-        self.prefill_batches = 0      # chunked prefill dispatches issued
-        self.preemptions = 0
-        self.admission_reorders = 0   # prefix-hits admitted past a blocked head
-        self.trie_match_reuses = 0    # per-request matches served from cache
 
-        # ----------------------------------------- disaggregation (cluster)
+        # -------------------------------------------------- telemetry
+        # ONE bundle per process: a cluster hands the same Telemetry to
+        # every worker (shared monotonic clock, shared registry under
+        # per-worker key prefixes, one trace timeline); a standalone
+        # engine makes its own.  Counters live in the registry as the
+        # one store; the legacy attribute names (`eng.preemptions`,
+        # `eng.shed`, ...) are int-returning properties over it — see
+        # `_ENGINE_COUNTERS` below the class body.
+        self.telemetry = telemetry or Telemetry()
+        self.worker_name = worker_name
+        self.worker_id = worker_id
+        self._scope = self.telemetry.registry.scope(worker_name)
+        self.tracer = self.telemetry.tracer
+        self._c = {attr: self._scope.counter(key, help=hint)
+                   for attr, (key, hint) in _ENGINE_COUNTERS.items()}
+        self.tracer.process_name(worker_id, worker_name or "engine")
+        self.tracer.process_name(REQUESTS_PID, "requests")
+        self.tracer.thread_name(worker_id, SCHED_TID, "scheduler")
+        for i in range(ec.num_slots):
+            self.tracer.thread_name(worker_id, lane_tid(i), f"slot{i}")
+        self.flight = FlightRecorder()
         self.outbox: list[KVHandoff] = []  # prefill role: exports ready
-        self.handoffs = 0             # prefill role: requests exported
-        self.handoff_bytes = 0        # KV bytes copied out for migration
-        self.imported_handoffs = 0    # decode role: migrations admitted
-        self.imported_bytes = 0       # KV bytes scattered into this pool
 
         # ------------------------------------------ lifecycle & faults
-        self._clock = time.time       # injectable for deadline tests
+        # one monotonic clock for deadlines, TTFT stamps, and trace
+        # spans (satellite: wall time only at the Trace submit
+        # boundary); still injectable for deadline tests
+        self._clock = self.telemetry.clock
         self._tick_no = 0
-        self.cancelled = 0            # Engine.cancel() terminations
-        self.deadline_expired = 0     # deadline_s budgets blown
-        self.shed = 0                 # backpressure rejections
-        self.failed = 0               # NaN/corruption terminations
-        self.starvation_pins = 0      # sequences pinned by the guard
-        self.alloc_faults_absorbed = 0  # injected alloc failures survived
-        self.nan_rows_detected = 0    # non-finite logits rows quarantined
-        self.corruptions_detected = 0  # CRC mismatches caught
-        self.slow_ticks = 0           # watchdog-flagged scheduler ticks
-        self.quarantines = 0          # slot lanes rested after a fault
+        self._tick_tokens = 0
         self.replay_artifacts: list[dict] = []
         self._quarantined: dict[int, int] = {}   # slot -> release tick
         self._chaos_blocked = False   # admission faulted this tick
         self._page_crc: dict[int, int] = {}      # page -> CRC32 (audit)
         self.watchdog = StragglerWatchdog(threshold=3.0)
         self.tick_latency = LatencyTracker()
+        self._register_gauges()
+        if self.chaos is not None:
+            self.telemetry.bind_chaos(self.chaos)
 
         self._prefill = _jit_prefill(self.api.prefill_into_cache)
         self._decode = _jit_decode(self.api.decode_step_paged)
+
+    def _register_gauges(self) -> None:
+        """Callback gauges over live engine state: evaluated at read
+        time, so the registry is always current and the hot path pays
+        nothing.  They close over ``self`` (not the current objects) —
+        tests that swap ``tick_latency``/``watchdog`` keep working."""
+        s = self._scope
+        s.gauge("engine.ticks", lambda: self._tick_no,
+                help="scheduler ticks run")
+        s.gauge("engine.queue.depth", lambda: len(self._queue),
+                help="requests waiting for admission")
+        s.gauge("engine.slots.live", lambda: self.live_slots,
+                help="occupied decode lanes")
+        s.gauge("engine.tick.p50_s", lambda: self.tick_latency.percentile(50))
+        s.gauge("engine.tick.p99_s", lambda: self.tick_latency.percentile(99))
+        s.gauge("engine.tick.mean_s", lambda: self.tick_latency.mean_s)
+        self.cache.register_metrics(s)
+        if self.prefix is not None:
+            s.gauge("engine.prefix.queries", lambda: self.prefix.stats.queries)
+            s.gauge("engine.prefix.hits", lambda: self.prefix.stats.hits)
+            s.gauge("engine.prefix.hit_rate",
+                    lambda: self.prefix.stats.hit_rate)
+            s.gauge("engine.prefix.token_hit_rate",
+                    lambda: self.prefix.stats.token_hit_rate)
+            s.gauge("engine.prefix.tokens_reused",
+                    lambda: self.prefix.stats.tokens_reused)
+            s.gauge("engine.prefix.evicted_pages",
+                    lambda: self.prefix.stats.evicted_pages)
+            s.gauge("engine.prefix.cow_copies",
+                    lambda: self.prefix.stats.cow_copies)
+            s.gauge("engine.prefix.pages", lambda: self.prefix.num_pages)
 
     # ---------------------------------------------------------------- api
     def submit(self, request: Request) -> int:
@@ -438,6 +486,7 @@ class Engine:
                 f"{self.engine_cfg.max_seq_len}")
         st = _SeqState(request, seq_no=self._seq_counter,
                        submit_t=self._clock())
+        st.trace = Trace(request.uid, st.submit_t)
         self._seq_counter += 1
         self._states[request.uid] = st
         ec = self.engine_cfg
@@ -445,6 +494,7 @@ class Engine:
             self.shed += 1
             if ec.shed_policy == "reject-new":
                 st.status, st.term = _FINISHED, ST_REJECTED
+                self._finish_trace(st, ST_REJECTED)
                 return request.uid
             self._terminate(self._queue[0], ST_REJECTED)  # shed-oldest
         self._queue.append(st)
@@ -508,6 +558,19 @@ class Engine:
         st.prefill_s = handoff.prefill_s
         st.preemptions = handoff.preemptions
         st.handoff = handoff
+        # the trace crossed the boundary inside the handoff: stamp the
+        # import on the SAME timeline (shared monotonic clock) and
+        # close the flow arrow the export opened
+        st.trace, handoff.trace = handoff.trace, None
+        if st.trace is not None:
+            t = self._clock()
+            st.trace.stamp("handoff_import", t,
+                           worker=self.worker_name or str(self.worker_id),
+                           nbytes=handoff.nbytes)
+            self.tracer.flow_end(self.worker_id, SCHED_TID, "kv_handoff",
+                                 handoff.flow_id, t, uid=req.uid)
+            self.tracer.instant(self.worker_id, SCHED_TID, "handoff_import",
+                                t, uid=req.uid)
         self._states[req.uid] = st
         self._queue.append(st)
         return req.uid
@@ -625,8 +688,9 @@ class Engine:
         """One scheduler tick: expire deadlines, audit checksums,
         admit, advance prefills by one chunk, decode once, retire.
         Returns the completions that finished during this tick."""
-        t_tick = time.time()
+        t_tick = self._clock()
         self._tick_no += 1
+        self._tick_tokens = 0         # prefill + decode tokens this tick
         self._chaos_blocked = False
         if self.chaos is not None:
             delay = self.chaos.tick_delay()
@@ -655,10 +719,31 @@ class Engine:
             page = self.chaos.corrupt_page(sorted(self._page_crc))
             if page is not None:
                 self.cache.corrupt_page(page)
-        dt_tick = time.time() - t_tick
+        t_end = self._clock()
+        dt_tick = t_end - t_tick
         self.tick_latency.observe(dt_tick)
         if self.watchdog.observe(self._tick_no, dt_tick):
             self.slow_ticks += 1
+        # flight recorder: always on — one small dict per tick into a
+        # bounded ring, dumped with the replay artifact on any failure
+        self.flight.record(tick=self._tick_no, t=t_tick, dt_s=dt_tick,
+                           queue_depth=len(self._queue),
+                           live_slots=self.live_slots,
+                           free_pages=self.cache.allocator.free_blocks,
+                           finished=len(finished))
+        if self.tracer.enabled:
+            pid = self.worker_id
+            self.tracer.complete(pid, SCHED_TID, "tick", t_tick, t_end,
+                                 tick=self._tick_no)
+            self.tracer.counter(pid, "queue_depth", t_end,
+                                depth=len(self._queue))
+            self.tracer.counter(pid, "live_slots", t_end,
+                                live=self.live_slots)
+            self.tracer.counter(pid, "free_pages", t_end,
+                                free=self.cache.allocator.free_blocks)
+            if dt_tick > 0:
+                self.tracer.counter(pid, "tok_s", t_end,
+                                    tok_s=self._tick_tokens / dt_tick)
         return finished
 
     def _decode_tick(self, active) -> list[Completion]:
@@ -682,13 +767,14 @@ class Engine:
             active_mask[i] = True
             pre_pos[i] = int(self.cache.lengths[i])
 
-        t0 = time.time()
+        t0 = self._clock()
         nxt_dev, ok_dev, view = self._decode(
             self.params, self.cache.view(cols=self._live_cols(active)),
             jnp.asarray(tokens), jnp.asarray(active_mask), self.cfg)
         nxt = np.asarray(nxt_dev)   # blocks until the step is done
         ok = np.array(ok_dev)       # writable: chaos may force a row low
-        dt = time.time() - t0
+        t1 = self._clock()
+        dt = t1 - t0
         self.cache.update_pages(view)
         # the device-computed lengths are the single source of truth
         # for *decoding* slots; prefilling slots keep their host value
@@ -714,6 +800,14 @@ class Engine:
             tok = int(nxt[i])
             st.tokens.append(tok)
             st.next_token = tok
+            self._tick_tokens += 1
+            if self.tracer.enabled:
+                # per-lane span on this worker's slot row + a stamp on
+                # the request's own timeline, every decode tick
+                self.tracer.complete(self.worker_id, lane_tid(i), "decode",
+                                     t0, t1, uid=st.request.uid, token=tok)
+                if st.trace is not None:
+                    st.trace.stamp("decode_tick", t1, slot=i)
             if self._checksum:
                 page = int(self.cache.block_tables[i, pre_pos[i] // bs])
                 self._page_crc[page] = self.cache.page_checksum(page)
@@ -784,8 +878,22 @@ class Engine:
         else:
             self.cache.audit_partition(set(), {})
 
+    @property
+    def metrics(self):
+        """This engine's view of the process metrics registry (a
+        :class:`~repro.runtime.telemetry.Scope`): the one store every
+        counter/gauge below actually lives in."""
+        return self._scope
+
     def fault_stats(self) -> dict:
-        """Lifecycle / fault / latency counters for benches and logs."""
+        """Lifecycle / fault / latency counters for benches and logs.
+
+        Deprecation shim: every value is a read of the metrics
+        registry (the counter attributes are properties over
+        ``engine.lifecycle.*`` / ``engine.faults.*`` keys, the
+        percentiles mirror the ``engine.tick.*`` gauges) — the dict
+        shape is frozen so existing consumers don't churn; new code
+        should read ``Engine.metrics`` / the registry directly."""
         d = {"ticks": self._tick_no,
              "cancelled": self.cancelled,
              "deadline_expired": self.deadline_expired,
@@ -803,6 +911,42 @@ class Engine:
         if self.chaos is not None:
             d.update(self.chaos.stats())
         return d
+
+    # ----------------------------------------------------------- tracing
+    def _finish_trace(self, st: _SeqState, status: str) -> None:
+        """Close a request's trace with its ONE terminal stamp, archive
+        it, and emit the request-track spans: a ``request`` span over
+        the whole lifetime plus queued/prefill/decode phase spans
+        nested inside it, all on the request's own row (tid = uid) of
+        the virtual ``requests`` process.  A prefill-role export
+        detaches the trace into the handoff *before* retiring, so the
+        terminal span is emitted exactly once, by whichever worker the
+        request actually ends on."""
+        tr = st.trace
+        if tr is None:
+            return
+        st.trace = None
+        t = self._clock()
+        tr.stamp("terminal", t, status=status)
+        tr.status = status
+        self.telemetry.finish_trace(tr)
+        if not self.tracer.enabled:
+            return
+        uid = tr.uid
+        t_sub = tr.submit_t
+        self.tracer.thread_name(REQUESTS_PID, uid, f"req{uid}")
+        self.tracer.complete(REQUESTS_PID, uid, "request", t_sub, t,
+                             uid=uid, status=status)
+        admit = st.admit_t
+        first = st.first_token_t
+        self.tracer.complete(REQUESTS_PID, uid, "queued", t_sub,
+                             admit if admit is not None else t, uid=uid)
+        if admit is not None:
+            self.tracer.complete(REQUESTS_PID, uid, "prefill", admit,
+                                 first if first is not None else t, uid=uid)
+        if first is not None:
+            self.tracer.complete(REQUESTS_PID, uid, "decode", first, t,
+                                 uid=uid, tokens=len(st.tokens))
 
     # ------------------------------------------------------ failure model
     def _terminate(self, st: _SeqState, status: str) -> None:
@@ -826,10 +970,22 @@ class Engine:
             except ValueError:
                 pass    # mid-submit: not enqueued yet
         st.status, st.term = _FINISHED, status
+        self._finish_trace(st, status)
 
     def _fault(self, st: _SeqState, kind: str) -> None:
         """Fail one request on a detected fault: dump a replay artifact
-        first (the state needed to reproduce), then terminate."""
+        first (the state needed to reproduce), then terminate.  The
+        chaos chain is walkable from either end: the fault stamp (with
+        the artifact name) lands on the request's trace before the
+        terminal stamp, and the artifact carries the trace + the
+        flight-recorder ring back."""
+        art_name = (f"replay_uid{int(st.request.uid)}_"
+                    f"tick{self._tick_no}.json")
+        if st.trace is not None:
+            st.trace.stamp("fault", self._clock(), kind=kind,
+                           artifact=art_name)
+        self.tracer.instant(self.worker_id, SCHED_TID, f"fault:{kind}",
+                            uid=int(st.request.uid), artifact=art_name)
         self._replay_artifact(st, kind)
         self.failed += 1
         self._terminate(st, ST_FAILED)
@@ -850,7 +1006,11 @@ class Engine:
                "tokens": [int(t) for t in st.tokens],
                "seq_no": st.seq_no,
                "preemptions": st.preemptions,
-               "chaos": None if self.chaos is None else self.chaos.stats()}
+               "chaos": None if self.chaos is None else self.chaos.stats(),
+               # the black box: what this engine was doing over the
+               # last N ticks, plus the request's own stamp timeline
+               "flight_recorder": self.flight.dump(),
+               "trace": None if st.trace is None else st.trace.to_dict()}
         self.replay_artifacts.append(art)
         rd = self.engine_cfg.replay_dir
         if rd:
@@ -932,6 +1092,7 @@ class Engine:
             self.prefix.unpin(st.pinned)
             st.pinned = []
         st.status = _FINISHED
+        self._finish_trace(st, st.term)
         return st.completion()
 
     def _export_handoff(self, slot: int, st: _SeqState) -> None:
@@ -950,6 +1111,22 @@ class Engine:
                       submit_t=st.submit_t, admit_t=st.admit_t,
                       first_token_t=st.first_token_t,
                       prefill_s=st.prefill_s, preemptions=st.preemptions)
+        # detach the trace INTO the handoff before retiring: the
+        # request is not terminal — it continues on a decode worker —
+        # so no terminal span here; the flow arrow (closed at import,
+        # or at the drop site on a migration fault) ties the two
+        # workers' timelines together
+        h.trace, st.trace = st.trace, None
+        if h.trace is not None:
+            t = self._clock()
+            h.flow_id = self.tracer.next_flow_id()
+            h.trace.stamp("handoff_export", t,
+                          worker=self.worker_name or str(self.worker_id),
+                          nbytes=h.nbytes)
+            self.tracer.flow_start(self.worker_id, SCHED_TID, "kv_handoff",
+                                   h.flow_id, t, uid=int(st.request.uid))
+            self.tracer.instant(self.worker_id, SCHED_TID, "handoff_export",
+                                t, uid=int(st.request.uid))
         self._retire(slot)
         del self._states[st.request.uid]
         self.outbox.append(h)
@@ -972,6 +1149,8 @@ class Engine:
         st.slot = -1
         st.status = _QUEUED
         st.preemptions += 1
+        if st.trace is not None:
+            st.trace.stamp("preempt", self._clock(), n=st.preemptions)
         self.preemptions += 1
         if st.preemptions == self.engine_cfg.max_preemptions:
             # starvation guard trips: from now on _make_room refuses to
@@ -1159,6 +1338,9 @@ class Engine:
         st.prefill_done = False
         if st.admit_t is None:
             st.admit_t = self._clock()
+            if st.trace is not None:
+                st.trace.stamp("admit", st.admit_t, slot=slot,
+                               prefix_len=prefix_len)
         self._slots[slot] = st
         return True
 
@@ -1222,6 +1404,8 @@ class Engine:
         st.prefill_done = True
         if st.admit_t is None:
             st.admit_t = self._clock()
+        if st.trace is not None:
+            st.trace.stamp("import_admit", self._clock(), slot=slot)
         self._slots[slot] = st
         self.imported_handoffs += 1
         self.imported_bytes += h.nbytes
@@ -1291,17 +1475,19 @@ class Engine:
             start[i] = s0
             takes[i] = take
             self.prefill_tokens_computed += take
+            self._tick_tokens += take
             cols_need = max(cols_need, -(-(s0 + take) // bs))
         self.prefill_batches += 1
         cols = min(self._pow2(cols_need), self.cache.max_blocks_per_seq)
 
-        t0 = time.time()
+        t0 = self._clock()
         nxt_dev, ok_dev, view = self._prefill(
             self.params, jnp.asarray(toks), self.cache.view(cols=cols),
             jnp.asarray(start), self.cfg)
         nxt = np.asarray(nxt_dev)   # blocks until the dispatch is done
         ok = np.array(ok_dev)       # writable: chaos may force a row low
-        dt = time.time() - t0
+        t1 = self._clock()
+        dt = t1 - t0
         self.cache.update_pages(view)
 
         # pages this dispatch wrote, recorded per-row BEFORE retiring /
@@ -1329,6 +1515,13 @@ class Engine:
         for i, st in pref:
             st.prefill_s += dt      # coalesced rows share the stamp
             st.prefill_pos += takes[i]
+            if self.tracer.enabled and takes[i]:
+                self.tracer.complete(self.worker_id, lane_tid(i),
+                                     "prefill_chunk", t0, t1,
+                                     uid=st.request.uid, tokens=takes[i])
+                if st.trace is not None:
+                    st.trace.stamp("prefill_chunk", t1, slot=i,
+                                   tokens=takes[i])
             if st.prefix_len + st.prefill_pos < len(st.full_prompt()):
                 continue            # more chunks to go
             if i in completing and not ok[i]:
@@ -1345,6 +1538,8 @@ class Engine:
                 st.next_token = tok
             if st.first_token_t is None and st.tokens:
                 st.first_token_t = self._clock()
+                if st.trace is not None:
+                    st.trace.stamp("first_token", st.first_token_t)
             if self._should_stop(st):
                 finished.append(self._retire(i))
             elif self.engine_cfg.role == "prefill":
@@ -1356,6 +1551,70 @@ class Engine:
                 for page in pages:
                     self._page_crc[page] = self.cache.page_checksum(page)
         return finished
+
+
+# Engine counters live in the metrics registry — ONE store with stable
+# namespaced keys (what benches, the serve launcher, and every future
+# ROADMAP item read).  The legacy attribute names stay as int-valued
+# properties over the registered Counter, so ~60 existing call sites
+# (`eng.shed += 1`, `clu.handoffs > 0`, json.dump of bench rows) read
+# and write the registry without knowing it exists.
+_ENGINE_COUNTERS = {
+    "total_decode_steps":
+        ("engine.decode.steps", "batched decode dispatches run"),
+    "prefill_tokens_computed":
+        ("engine.prefill.tokens", "prompt tokens actually computed"),
+    "prefill_batches":
+        ("engine.prefill.chunks", "chunked prefill dispatches issued"),
+    "preemptions":
+        ("engine.sched.preemptions", "sequences preempted for pages"),
+    "admission_reorders":
+        ("engine.sched.reorders", "prefix hits admitted past a blocked head"),
+    "trie_match_reuses":
+        ("engine.sched.trie_reuses", "memoized trie matches served"),
+    "starvation_pins":
+        ("engine.sched.starvation_pins", "sequences pinned by the guard"),
+    "handoffs":
+        ("engine.handoff.exported", "prefill role: requests exported"),
+    "handoff_bytes":
+        ("engine.handoff.exported_bytes", "KV bytes copied out for migration"),
+    "imported_handoffs":
+        ("engine.handoff.imported", "decode role: migrations admitted"),
+    "imported_bytes":
+        ("engine.handoff.imported_bytes", "KV bytes scattered into this pool"),
+    "cancelled":
+        ("engine.lifecycle.cancelled", "Engine.cancel() terminations"),
+    "deadline_expired":
+        ("engine.lifecycle.deadline_expired", "deadline_s budgets blown"),
+    "shed":
+        ("engine.lifecycle.shed", "backpressure rejections"),
+    "failed":
+        ("engine.lifecycle.failed", "NaN/corruption terminations"),
+    "alloc_faults_absorbed":
+        ("engine.faults.alloc_absorbed", "injected alloc failures survived"),
+    "nan_rows_detected":
+        ("engine.faults.nan_rows", "non-finite logits rows quarantined"),
+    "corruptions_detected":
+        ("engine.faults.corruptions", "CRC mismatches caught"),
+    "slow_ticks":
+        ("engine.faults.slow_ticks", "watchdog-flagged scheduler ticks"),
+    "quarantines":
+        ("engine.faults.quarantines", "slot lanes rested after a fault"),
+}
+
+
+def _install_counter_views(cls, mapping) -> None:
+    for attr in mapping:
+        def _get(self, _a=attr):
+            return self._c[_a].value
+
+        def _set(self, v, _a=attr):
+            self._c[_a]._value = int(v)
+
+        setattr(cls, attr, property(_get, _set))
+
+
+_install_counter_views(Engine, _ENGINE_COUNTERS)
 
 
 __all__ = ["Engine", "EngineConfig", "Request", "Completion", "KVHandoff",

@@ -99,6 +99,14 @@ class LatencyTracker:
     def mean_s(self) -> float:
         return self.total_s / max(self.count, 1)
 
+    def summary(self) -> dict:
+        """The distribution as one JSON-ready dict — what a registry
+        Histogram snapshot reports."""
+        return {"count": self.count,
+                "mean_s": self.mean_s,
+                "p50_s": self.percentile(50),
+                "p99_s": self.percentile(99)}
+
 
 class PreemptionSignal:
     """Cooperative preemption: SIGTERM handler + file flag (tests)."""

@@ -191,6 +191,19 @@ class PagedKVCache:
         return (2 * num_layers * num_seqs * max_len * num_kv_heads
                 * head_dim * jnp.dtype(dtype).itemsize)
 
+    def register_metrics(self, scope) -> None:
+        """Register allocator/pool gauges under ``engine.pages.*`` in a
+        metrics scope (duck-typed ``telemetry.Scope`` — this module
+        never imports the telemetry machinery).  Callback-backed, so
+        reads always see the live free list."""
+        a = self.allocator
+        scope.gauge("engine.pages.free", lambda: a.free_blocks,
+                    help="pages on the free list")
+        scope.gauge("engine.pages.in_use", lambda: a.blocks_in_use)
+        scope.gauge("engine.pages.peak", lambda: a.peak_in_use)
+        scope.gauge("engine.pages.bytes_in_use", self.kv_bytes_in_use)
+        scope.gauge("engine.pages.peak_bytes", self.peak_kv_bytes)
+
     # ------------------------------------------------------------ slot ops
     def bind_slot(self, slot: int, prompt_tokens: int,
                   shared: Sequence[int] = (), *,
