@@ -223,7 +223,9 @@ def actquant_rows(iters: int = 10) -> list[dict]:
     out_act = act.generate(clone())
     agree = float(np.mean([np.mean(a.tokens == b.tokens)
                            for a, b in zip(out_fp, out_act)]))
-    sq = [s for v in act.act_report.values() for s in v]
+    # per-head KV sites nest their SQNR lists — flatten uniformly
+    sq = [float(s) for v in act.act_report.values()
+          for s in np.asarray(v).ravel()]
     rows.append(
         {"name": "actquant/token_agreement", "value": agree,
          "derived": "act-quant on vs off, tiny-config engine scenario "
@@ -232,6 +234,99 @@ def actquant_rows(iters: int = 10) -> list[dict]:
         {"name": "actquant/mean_sqnr_db",
          "value": float(np.mean(sq)),
          "derived": f"calibrated {len(sq)} (layer, site) act tensors"})
+    return rows
+
+
+# ---------------------------------------------------------------------
+# Codes-mode KV cache rows (BENCH_serving.json, kvcodes/*): pages as
+# calibrated u8 DNA-TEQ exponent codes decoded through per-head LUTs
+# inside the attention kernels, vs the f8 narrow-byte cache (both act-
+# quantized, same weights).  Token agreement is judged against the
+# f32-KV reference; the activation-HBM rows come from the engine's
+# analytic `engine.attn.*` counters — CI asserts agreement >= 0.95 and
+# codes/f8 activation bytes <= 0.3 (u8 q/context vs f32 is 0.25).
+# ---------------------------------------------------------------------
+
+def kvcodes_rows() -> list[dict]:
+    from repro.configs import get_config
+    from repro.runtime.engine import Engine, EngineConfig, Request
+
+    cfg = get_config("qwen3-1.7b", tiny=True).replace(
+        num_layers=2, d_model=64, d_ff=192, compute_dtype="float32",
+        vocab_size=128)
+    # the canonical seeded accuracy scenario (same stream the act-quant
+    # acceptance harness pins in tests/test_act_quant.py)
+    rng = np.random.default_rng(3)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size,
+                                    int(l)).astype(np.int32),
+                    max_new_tokens=6)
+            for i, l in enumerate([16, 24, 32] * 4)]
+    clone = lambda: [Request(r.uid, r.prompt, r.max_new_tokens)
+                     for r in reqs]
+    # prefix cache off: every repeat re-prefills, so the analytic
+    # attention-traffic counters cover identical work in every engine
+    ecfg = EngineConfig(num_slots=4, block_size=16, max_seq_len=64,
+                        prefix_cache=False)
+    fp = Engine(cfg, quant_bits=7, act_quant=7, engine=ecfg)
+    f8 = Engine(cfg, params=fp.params, act_quant=7,
+                kv_dtype="float8_e4m3fn", engine=ecfg)
+    codes = Engine(cfg, params=fp.params, act_quant=7, kv_codes=True,
+                   engine=ecfg)
+
+    def run(eng):
+        eng.generate(clone())       # warm the jit caches
+        t0 = time.perf_counter()
+        outs = eng.generate(clone())
+        dt = time.perf_counter() - t0
+        return outs, sum(len(c.tokens) for c in outs) / dt
+
+    out_fp, _ = run(fp)
+    out_f8, f8_tps = run(f8)
+    codes_out, codes_tps = run(codes)
+    agree = float(np.mean([np.mean(a.tokens == b.tokens)
+                           for a, b in zip(out_fp, codes_out)]))
+    agree_f8 = float(np.mean([np.mean(a.tokens == b.tokens)
+                              for a, b in zip(out_f8, codes_out)]))
+    act_ratio = codes.attn_act_bytes / f8.attn_act_bytes
+    read_ratio = codes.attn_bytes_read / f8.attn_bytes_read
+    rows = [
+        {"name": "kvcodes/codes_tok_s", "tok_s": codes_tps,
+         "derived": "u8 exponent-code KV pages, per-head LUT decode "
+                    "in-kernel, code-in/code-out attention"},
+        {"name": "kvcodes/f8_tok_s", "tok_s": f8_tps,
+         "derived": "float8_e4m3fn KV baseline (same weights + act "
+                    "quant, same stream)"},
+        {"name": "kvcodes/token_agreement", "value": agree,
+         "derived": "codes-KV vs f32-KV reference, greedy tokens "
+                    "(CI asserts >= 0.95)"},
+        {"name": "kvcodes/token_agreement_vs_f8", "value": agree_f8,
+         "derived": "codes-KV vs f8-KV, greedy tokens"},
+        {"name": "kvcodes/attn_act_bytes_codes",
+         "value": int(codes.attn_act_bytes),
+         "derived": "analytic activation bytes at the attention "
+                    "boundary (q in + context out), codes engine"},
+        {"name": "kvcodes/attn_act_bytes_f8",
+         "value": int(f8.attn_act_bytes),
+         "derived": "same analytic model, f8-KV engine (f32 q/context)"},
+        {"name": "kvcodes/attn_act_bytes_ratio", "value": float(act_ratio),
+         "derived": "codes/f8 attention activation HBM (CI asserts "
+                    "<= 0.3; u8 vs f32 boundary tensors is 0.25)"},
+        {"name": "kvcodes/attn_bytes_read_ratio", "value": float(read_ratio),
+         "derived": "codes/f8 total attention-kernel input bytes "
+                    "(KV pages are 1 B/elem in both)"},
+        {"name": "kvcodes/attn_dequants",
+         "value": int(codes.attn_dequants),
+         "derived": "elements LUT-decoded inside the attention kernels "
+                    "over the codes run (q + K + V)"},
+    ]
+    # per-site SQNR for the attention-boundary sites (per-head KV sites
+    # nest their lists — flatten before averaging)
+    for site in ("attn_q", "attn_k", "attn_v", "attn_out"):
+        sq = np.asarray(codes.act_report[site], np.float64).ravel()
+        rows.append(
+            {"name": f"kvcodes/sqnr_{site}_db", "value": float(sq.mean()),
+             "derived": f"mean round-trip SQNR over {sq.size} calibrated "
+                        f"{site} tables"})
     return rows
 
 
@@ -813,6 +908,7 @@ SERVING_SCENARIOS = {
     "overload": overload_rows,
     "disagg": disagg_rows,
     "telemetry": telemetry_rows,
+    "kvcodes": kvcodes_rows,
 }
 
 

@@ -123,7 +123,9 @@ def main():
     bits = [b for b, _ in q.quant_report.values()]
     print(f"quantized {len(bits)} weight tensors at {stt.mean(bits):.0f} "
           f"exponent bits")
-    sq = [s for v in qact.act_report.values() for s in v]
+    # per-head KV sites nest one SQNR per head — flatten before the mean
+    sq = [float(s) for v in qact.act_report.values()
+          for s in np.asarray(v).ravel()]
     print(f"act-quant    : {toks/qact_dt:6.1f} tok/s (calibrated "
           f"{len(sq)} (layer, site) tensors in {calib_dt:.1f}s, mean "
           f"SQNR {stt.mean(sq):.1f} dB); matmul activations cross HBM "

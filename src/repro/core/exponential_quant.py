@@ -144,8 +144,14 @@ def encode_meta(x: jax.Array, qmeta: jax.Array) -> jax.Array:
     which is what the in-kernel quantize epilogue and the activation
     path need: per-layer metas ride through ``lax.scan`` as arrays.
     Matches :func:`encode` bit-for-bit for the same parameters.
+
+    ``qmeta`` may carry leading broadcast dims (``[..., 4]``): a
+    per-head KV meta of shape ``[n_kv, 1, 4]`` broadcasts against
+    ``x`` of shape ``[..., n_kv, hd]`` so each head encodes through
+    its own (alpha, beta, base) without any reshape of ``x``.
     """
-    alpha, beta, base, bits = qmeta[0], qmeta[1], qmeta[2], qmeta[3]
+    alpha, beta, base, bits = (qmeta[..., 0], qmeta[..., 1],
+                               qmeta[..., 2], qmeta[..., 3])
     e_min = -jnp.exp2(bits - 1.0)
     e_max = jnp.exp2(bits - 1.0) - 1.0
     mag = jnp.abs(x).astype(jnp.float32)
@@ -157,8 +163,12 @@ def encode_meta(x: jax.Array, qmeta: jax.Array) -> jax.Array:
 
 def decode_meta(codes: jax.Array, qmeta: jax.Array,
                 dtype=jnp.float32) -> jax.Array:
-    """ALU decode from a packed ``[4]`` qmeta array (no table)."""
-    alpha, beta, base, bits = qmeta[0], qmeta[1], qmeta[2], qmeta[3]
+    """ALU decode from a packed ``[..., 4]`` qmeta array (no table).
+
+    Like :func:`encode_meta`, leading qmeta dims broadcast against
+    ``codes`` (per-head metas decode per-head)."""
+    alpha, beta, base, bits = (qmeta[..., 0], qmeta[..., 1],
+                               qmeta[..., 2], qmeta[..., 3])
     e_min = -jnp.exp2(bits - 1.0)
     c = codes.astype(jnp.int32)
     sign = 1.0 - 2.0 * (c >> 7).astype(jnp.float32)

@@ -1,6 +1,8 @@
 from repro.kernels.decode_gqa.ops import (  # noqa: F401
     decode_gqa,
     decode_gqa_paged,
+    decode_gqa_paged_codes,
+    decode_gqa_paged_codes_ref,
     decode_gqa_paged_ref,
     decode_gqa_ref,
 )

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core import exponential_quant as eq
+from repro.kernels._codes import decode_heads
 from repro.kernels._compat import CompilerParams
 
 
@@ -79,6 +81,118 @@ def _paged_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
     _kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
             block_s=block_s, num_kv=num_kv, groups=groups,
             out_dtype=out_dtype)
+
+
+def _paged_codes_kernel(len_ref, bt_ref, q_ref, k_ref, v_ref, qlut_ref,
+                        klut_ref, vlut_ref, om_ref, o_ref, m_ref, l_ref,
+                        acc_ref, *, block_s: int):
+    """Codes-mode body: q and the KV pages arrive as uint8 DNA-TEQ
+    codes, decoded through 256-entry VMEM LUTs *after* the HBM→VMEM DMA
+    (1 B/elem crosses HBM); the flush re-encodes the context under
+    ``om_ref`` (the attn_out site meta) so the kernel is code-in/
+    code-out — no f32 activation ever leaves it."""
+    del bt_ref
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, -1e30)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = jnp.take(qlut_ref[0], q_ref[0].astype(jnp.int32), axis=0)
+    k = decode_heads(klut_ref[...], k_ref[0])     # [bs, n_kv, hd] (dequant!)
+    v = decode_heads(vlut_ref[...], v_ref[0])
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+
+    logit = jnp.einsum("ngh,snh->ngs", q, k,
+                       preferred_element_type=jnp.float32) * scale
+    pos = j * block_s + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_s), 2)
+    valid = pos < len_ref[b]
+    logit = jnp.where(valid, logit, -1e30)
+
+    m_prev = m_ref[...]                            # [n_kv, g]
+    m_new = jnp.maximum(m_prev, jnp.max(logit, axis=-1))
+    p = jnp.exp(logit - m_new[..., None])          # [n_kv, g, bs]
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "ngs,snh->ngh", p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _flush():
+        seen = m_ref[...] > -5e29                      # [n_kv, g]
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out = jnp.where(seen[..., None], out, 0.0)     # [n_kv, g, hd]
+        o_ref[0] = eq.encode_meta(out, om_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def decode_gqa_paged_codes_kernel(
+    q_codes: jax.Array,       # [B, n_kv, g, hd] uint8 — roped q codes
+    k_pages: jax.Array,       # [N_blocks, bs, n_kv, hd] uint8 codes
+    v_pages: jax.Array,       # [N_blocks, bs, n_kv, hd] uint8 codes
+    q_lut: jax.Array,         # [256] f32 — attn_q decode table
+    k_lut: jax.Array,         # [n_kv, 256] f32 — per-head K decode tables
+    v_lut: jax.Array,         # [n_kv, 256] f32 — per-head V decode tables
+    out_qmeta: jax.Array,     # [4] f32 — attn_out (alpha, beta, base, bits)
+    block_tables: jax.Array,  # [B, max_blk] int32
+    lengths: jax.Array,       # [B] int32
+    *,
+    interpret: bool = False,
+) -> jax.Array:
+    """Codes-mode flash decode: same paging/masking contract as
+    :func:`decode_gqa_paged_kernel`, but every operand is uint8 DNA-TEQ
+    codes.  Decode tables ride as VMEM-resident blocks (constant
+    index_map — fetched once, the dual-LUT matmul idiom); the output is
+    the uint8 re-encode of the context under ``out_qmeta``.  Returns
+    [B, n_kv, g, hd] uint8.
+    """
+    b, n_kv, g, hd = q_codes.shape
+    block_s = k_pages.shape[1]
+    max_blk = block_tables.shape[1]
+    grid = (b, max_blk)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,   # lengths, block_tables
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, n_kv, g, hd), lambda i, j, L, T: (i, 0, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, hd),
+                         lambda i, j, L, T: (T[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, block_s, n_kv, hd),
+                         lambda i, j, L, T: (T[i, j], 0, 0, 0)),
+            pl.BlockSpec((1, 256), lambda i, j, L, T: (0, 0)),
+            pl.BlockSpec((n_kv, 256), lambda i, j, L, T: (0, 0)),
+            pl.BlockSpec((n_kv, 256), lambda i, j, L, T: (0, 0)),
+            pl.BlockSpec((1, 4), lambda i, j, L, T: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n_kv, g, hd),
+                               lambda i, j, L, T: (i, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((n_kv, g), jnp.float32),        # running max
+            pltpu.VMEM((n_kv, g), jnp.float32),        # running denom
+            pltpu.VMEM((n_kv, g, hd), jnp.float32),    # accumulator
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_codes_kernel, block_s=block_s),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, n_kv, g, hd), jnp.uint8),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(lengths.astype(jnp.int32), block_tables.astype(jnp.int32),
+      q_codes, k_pages, v_pages,
+      q_lut.astype(jnp.float32).reshape(1, 256),
+      k_lut.astype(jnp.float32),
+      v_lut.astype(jnp.float32),
+      out_qmeta.astype(jnp.float32).reshape(1, 4))
 
 
 @functools.partial(jax.jit, static_argnames=("out_dtype", "interpret"))

@@ -13,9 +13,14 @@ import jax.numpy as jnp
 
 from repro.kernels.decode_gqa.decode_gqa import (
     decode_gqa_kernel,
+    decode_gqa_paged_codes_kernel,
     decode_gqa_paged_kernel,
 )
-from repro.kernels.decode_gqa.ref import decode_gqa_paged_ref, decode_gqa_ref
+from repro.kernels.decode_gqa.ref import (
+    decode_gqa_paged_codes_ref,
+    decode_gqa_paged_ref,
+    decode_gqa_ref,
+)
 
 
 def decode_gqa(q, k_cache, v_cache, lengths, *, block_s: int | None = None,
@@ -81,5 +86,32 @@ def decode_gqa_paged(q, k_pages, v_pages, block_tables, lengths, *,
                                    interpret=bool(interpret))
 
 
-__all__ = ["decode_gqa", "decode_gqa_paged", "decode_gqa_paged_ref",
+def decode_gqa_paged_codes(q_codes, k_pages, v_pages, q_lut, k_lut, v_lut,
+                           out_qmeta, block_tables, lengths, *,
+                           interpret: bool | None = None):
+    """Codes-mode flash decode over a paged KV cache: uint8 in, uint8
+    out.  ``q_codes`` [B, n_kv, g, hd] uint8 (attn_q site codes); pages
+    uint8 DNA-TEQ codes decoded in-kernel through per-head 256-entry
+    LUTs (``k_lut``/``v_lut`` [n_kv, 256]); the context is re-encoded
+    under ``out_qmeta`` (the attn_out site) before it leaves the
+    kernel.  Same paging/masking contract as :func:`decode_gqa_paged`;
+    off-TPU the default execution is the page-scan codes oracle (the
+    identical recurrence, so the two are bit-comparable).  Returns
+    [B, n_kv, g, hd] uint8.
+    """
+    b = q_codes.shape[0]
+    max_tokens = block_tables.shape[1] * k_pages.shape[1]
+    lengths = jnp.broadcast_to(jnp.asarray(lengths, jnp.int32), (b,))
+    lengths = jnp.clip(lengths, 0, max_tokens)
+    if interpret is None and jax.default_backend() == "cpu":
+        return decode_gqa_paged_codes_ref(
+            q_codes, k_pages, v_pages, q_lut, k_lut, v_lut, out_qmeta,
+            block_tables, lengths)
+    return decode_gqa_paged_codes_kernel(
+        q_codes, k_pages, v_pages, q_lut, k_lut, v_lut, out_qmeta,
+        block_tables, lengths, interpret=bool(interpret))
+
+
+__all__ = ["decode_gqa", "decode_gqa_paged", "decode_gqa_paged_codes",
+           "decode_gqa_paged_codes_ref", "decode_gqa_paged_ref",
            "decode_gqa_ref"]

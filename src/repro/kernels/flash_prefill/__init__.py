@@ -1,4 +1,6 @@
 from repro.kernels.flash_prefill.ops import (  # noqa: F401
     flash_prefill_paged,
+    flash_prefill_paged_codes,
+    flash_prefill_paged_codes_ref,
     flash_prefill_paged_ref,
 )

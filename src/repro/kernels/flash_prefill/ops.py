@@ -14,9 +14,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_prefill.flash_prefill import (
+    flash_prefill_paged_codes_kernel,
     flash_prefill_paged_kernel,
 )
-from repro.kernels.flash_prefill.ref import flash_prefill_paged_ref
+from repro.kernels.flash_prefill.ref import (
+    flash_prefill_paged_codes_ref,
+    flash_prefill_paged_ref,
+)
 
 
 def flash_prefill_paged(q, k_pages, v_pages, block_tables, q_start,
@@ -48,4 +52,32 @@ def flash_prefill_paged(q, k_pages, v_pages, block_tables, q_start,
                                       interpret=bool(interpret))
 
 
-__all__ = ["flash_prefill_paged", "flash_prefill_paged_ref"]
+def flash_prefill_paged_codes(q_codes, k_pages, v_pages, q_lut, k_lut,
+                              v_lut, out_qmeta, block_tables, q_start,
+                              kv_lens, *, interpret: bool | None = None):
+    """Codes-mode chunked flash prefill: uint8 in, uint8 out.
+
+    ``q_codes`` [B, S, n_kv, g, hd] uint8 (attn_q site codes); pages
+    uint8 DNA-TEQ codes decoded in-kernel through per-head 256-entry
+    LUTs (``k_lut``/``v_lut`` [n_kv, 256]); the attention context is
+    re-encoded under ``out_qmeta`` (the attn_out site) before it leaves
+    the kernel.  Same paging/masking contract as
+    :func:`flash_prefill_paged`.  Returns [B, S, n_kv, g, hd] uint8.
+    """
+    b = q_codes.shape[0]
+    max_tokens = block_tables.shape[1] * k_pages.shape[1]
+    q_start = jnp.broadcast_to(jnp.asarray(q_start, jnp.int32), (b,))
+    kv_lens = jnp.clip(
+        jnp.broadcast_to(jnp.asarray(kv_lens, jnp.int32), (b,)),
+        0, max_tokens)
+    if interpret is None and jax.default_backend() == "cpu":
+        return flash_prefill_paged_codes_ref(
+            q_codes, k_pages, v_pages, q_lut, k_lut, v_lut, out_qmeta,
+            block_tables, q_start, kv_lens)
+    return flash_prefill_paged_codes_kernel(
+        q_codes, k_pages, v_pages, q_lut, k_lut, v_lut, out_qmeta,
+        block_tables, q_start, kv_lens, interpret=bool(interpret))
+
+
+__all__ = ["flash_prefill_paged", "flash_prefill_paged_codes",
+           "flash_prefill_paged_codes_ref", "flash_prefill_paged_ref"]

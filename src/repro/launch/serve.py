@@ -75,6 +75,11 @@ def main():
                          "long prompts interleave with running decodes")
     ap.add_argument("--kv-dtype", default="float32",
                     help='e.g. "float8_e4m3fn" for the narrow-byte cache')
+    ap.add_argument("--kv-codes", action="store_true",
+                    help="store KV pages as calibrated u8 DNA-TEQ "
+                         "exponent codes decoded through per-head LUTs "
+                         "inside the attention kernels (requires "
+                         "--act-quant; engine path only)")
     ap.add_argument("--bucketed", action="store_true",
                     help="legacy length-bucketed contiguous-cache path")
     ap.add_argument("--no-prefix-cache", action="store_true",
@@ -125,6 +130,11 @@ def main():
     disagg = args.prefill_workers > 0 or args.decode_workers > 0
     if disagg and args.bucketed:
         ap.error("--bucketed and --prefill/--decode-workers are exclusive")
+    if args.kv_codes:
+        if args.act_quant is None:
+            ap.error("--kv-codes requires --act-quant")
+        if args.bucketed or disagg:
+            ap.error("--kv-codes applies to the unified engine path only")
     if args.bucketed and (args.trace or args.metrics_json):
         print("note: --trace/--metrics-json apply to the engine and "
               "cluster paths only; the bucketed baseline is untraced")
@@ -196,7 +206,7 @@ def main():
     else:
         eng = Engine(
             cfg, quant_bits=args.quant, act_quant=args.act_quant,
-            kv_dtype=args.kv_dtype,
+            kv_dtype=args.kv_dtype, kv_codes=args.kv_codes,
             chaos=(None if args.chaos is None
                    else ChaosConfig.storm(args.chaos)),
             telemetry=tel,
@@ -282,13 +292,16 @@ def main():
                 print(f"replay artifacts: {len(eng.replay_artifacts)}")
     if disagg and clu.act_report is not None:
         import statistics as st
-        sq = [s for v in clu.act_report.values() for s in v]
+        # per-head KV sites nest their SQNR lists — flatten uniformly
+        sq = [float(s) for v in clu.act_report.values()
+              for s in np.asarray(v).ravel()]
         print(f"act-quant: {len(sq)} (layer, site) tensors calibrated, "
               f"mean SQNR {st.mean(sq):.1f} dB "
               f"(sites: {', '.join(sorted(clu.act_report))})")
     if not args.bucketed and not disagg and eng.act_report is not None:
         import statistics as st
-        sq = [s for v in eng.act_report.values() for s in v]
+        sq = [float(s) for v in eng.act_report.values()
+              for s in np.asarray(v).ravel()]
         print(f"act-quant: {len(sq)} (layer, site) tensors calibrated, "
               f"mean SQNR {st.mean(sq):.1f} dB "
               f"(sites: {', '.join(sorted(eng.act_report))})")

@@ -117,8 +117,19 @@ def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
 # tensor feeding a quantized matmul; encoding there turns the matmul
 # dual-operand (both sides uint8 codes, dual-LUT kernel), and the
 # mlp_mid site is produced *in-kernel* by the quantize epilogue.
+#
+# The attention-boundary sites (attn_q / attn_k / attn_v) feed the
+# codes-mode KV cache and flash kernels: attn_k/attn_v are fit PER
+# HEAD (``qmeta [L, n_kv, 4]``, ``lut [L, n_kv, 256]``) and are what
+# u8 KV pages store; attn_q is the roped query the kernels consume as
+# codes.  The attention output re-encodes in-kernel under the existing
+# attn_out site, so attention is code-in/code-out like the MLP chain.
 
-ACT_SITES = ("attn_in", "attn_out", "mlp_in", "mlp_mid")
+ACT_SITES = ("attn_in", "attn_out", "mlp_in", "mlp_mid",
+             "attn_q", "attn_k", "attn_v")
+
+# The sites codes-mode attention needs beyond the PR-5 matmul sites.
+KV_CODE_SITES = ("attn_q", "attn_k", "attn_v", "attn_out")
 
 
 def _q(x, act_q, site: str):
@@ -132,6 +143,32 @@ def _mid_q(act_q):
     if act_q is None or not ll.get_policy().act_quant:
         return None
     return act_q.get("mlp_mid")
+
+
+def _kv_codes_q(act_q):
+    """The act_q dict when codes-mode attention is live (all attention-
+    boundary sites present and the policy has act_quant on), else None."""
+    if act_q is None or not ll.get_policy().act_quant:
+        return None
+    if not all(s in act_q for s in KV_CODE_SITES):
+        return None
+    return act_q
+
+
+def encode_kv_codes(k: jax.Array, v: jax.Array, act_q: dict):
+    """Quantize-at-write: encode fresh K/V ([B, S, n_kv, hd] float) to
+    uint8 codes with this layer's per-head attn_k/attn_v metas
+    (``qmeta [n_kv, 4]``) — what a u8 codes-mode KV page stores."""
+    act_q = _kv_codes_q(act_q)
+    if act_q is None:
+        raise ValueError(
+            "uint8 codes-mode KV pages need calibrated attn_q/attn_k/"
+            "attn_v/attn_out act-quant sites with the act_quant policy "
+            "on (kv_codes engines calibrate them)")
+    kq = act_q["attn_k"]["qmeta"]          # [n_kv, 4]
+    vq = act_q["attn_v"]["qmeta"]
+    return (ll.eq.encode_meta(k, kq[:, None, :]),
+            ll.eq.encode_meta(v, vq[:, None, :]))
 
 
 # --------------------------------------------------------- attention --
@@ -432,19 +469,40 @@ def mha_decode_paged(
     scalar-prefetch operand so each page's HBM→VMEM DMA is issued
     straight from the table — no [B, S] contiguous gather ever
     materializes.  ``flash_decode=False`` in the policy swaps in the
-    pure-jnp paged oracle (gather + dense attend) for A/B checks."""
-    from repro.kernels.decode_gqa import decode_gqa_paged, decode_gqa_paged_ref
+    pure-jnp paged oracle (gather + dense attend) for A/B checks.
+
+    When the pages hold uint8 DNA-TEQ codes (codes-mode KV cache), the
+    roped query is encoded at the attn_q site, the codes kernel decodes
+    q/K/V through per-head VMEM LUTs and re-encodes the context under
+    the attn_out meta in-kernel, and the output projection consumes the
+    resulting ``QTensor`` directly — code-in/code-out through the whole
+    attend, no f32 activation at the attention boundary."""
+    from repro.kernels.decode_gqa import (decode_gqa_paged,
+                                          decode_gqa_paged_codes,
+                                          decode_gqa_paged_ref)
 
     dt = x.dtype
-    q = ll.dense_general(_q(x, act_q, "attn_in"), p["wq"],
-                         "bsd,dnh->bsnh", dtype=dt)
-    if cfg.qk_norm:
-        q = apply_head_rms(p["q_norm"], q)
-    if use_rope:
-        q = rope(q, positions, cfg.rope_theta)
+    q = roped_q(p, x, cfg, positions, use_rope=use_rope, act_q=act_q)
     b, s, h, hd = q.shape
     groups = cfg.num_heads // cfg.num_kv_heads
     qg = q[:, 0].reshape(b, cfg.num_kv_heads, groups, hd)
+    if k_pages.dtype == jnp.uint8:
+        aq = _kv_codes_q(act_q)
+        if aq is None:
+            raise ValueError(
+                "uint8 codes-mode KV pages need calibrated attn_q/"
+                "attn_k/attn_v/attn_out act-quant sites (kv_codes "
+                "engines calibrate them; found none on this attend)")
+        # codes mode ignores flash_decode: off-TPU the codes op runs
+        # the page-scan oracle, the *identical* recurrence.
+        q_codes = ll.eq.encode_meta(qg, aq["attn_q"]["qmeta"])
+        out = decode_gqa_paged_codes(
+            q_codes, k_pages, v_pages, aq["attn_q"]["lut"],
+            aq["attn_k"]["lut"], aq["attn_v"]["lut"],
+            aq["attn_out"]["qmeta"], block_tables, lengths)
+        ctx = ll.eq.QTensor(out.reshape(b, 1, h, hd),
+                            aq["attn_out"]["lut"], aq["attn_out"]["qmeta"])
+        return ll.dense_general(ctx, p["wo"], "bsnh,nhd->bsd", dtype=dt)
     if ll.get_policy().flash_decode:
         out = decode_gqa_paged(qg, k_pages, v_pages, block_tables, lengths)
     else:
@@ -481,9 +539,49 @@ def mha_prefill_paged(
     chunk's own K/V into the pages *before* this runs, so within-chunk
     causality falls out of the same positional mask that covers the
     cached prefix; no ``[B, S, T]`` mask or score matrix exists at any
-    point."""
-    from repro.kernels.flash_prefill import flash_prefill_paged
+    point.
 
+    With uint8 codes-mode pages the chunk runs code-in/code-out exactly
+    like :func:`mha_decode_paged`: attn_q-encoded queries, per-head
+    VMEM LUT decode of K/V in-kernel, attn_out re-encode epilogue, and
+    a ``QTensor`` context fed straight to the output projection."""
+    from repro.kernels.flash_prefill import (flash_prefill_paged,
+                                             flash_prefill_paged_codes)
+
+    dt = x.dtype
+    q = roped_q(p, x, cfg, positions, use_rope=use_rope, act_q=act_q)
+    b, s, h, hd = q.shape
+    groups = cfg.num_heads // cfg.num_kv_heads
+    qg = q.reshape(b, s, cfg.num_kv_heads, groups, hd)
+    if k_pages.dtype == jnp.uint8:
+        aq = _kv_codes_q(act_q)
+        if aq is None:
+            raise ValueError(
+                "uint8 codes-mode KV pages need calibrated attn_q/"
+                "attn_k/attn_v/attn_out act-quant sites (kv_codes "
+                "engines calibrate them; found none on this attend)")
+        q_codes = ll.eq.encode_meta(qg, aq["attn_q"]["qmeta"])
+        out = flash_prefill_paged_codes(
+            q_codes, k_pages, v_pages, aq["attn_q"]["lut"],
+            aq["attn_k"]["lut"], aq["attn_v"]["lut"],
+            aq["attn_out"]["qmeta"], block_tables, q_start, kv_lens)
+        ctx = ll.eq.QTensor(out.reshape(b, s, h, hd),
+                            aq["attn_out"]["lut"], aq["attn_out"]["qmeta"])
+        return ll.dense_general(ctx, p["wo"], "bsnh,nhd->bsd", dtype=dt)
+    out = flash_prefill_paged(qg, k_pages, v_pages, block_tables,
+                              q_start, kv_lens)
+    out = out.reshape(b, s, h, hd).astype(dt)
+    return ll.dense_general(_q(out, act_q, "attn_out"), p["wo"],
+                            "bsnh,nhd->bsd", dtype=dt)
+
+
+def roped_q(p: Params, x: jax.Array, cfg: ModelConfig,
+            positions: jax.Array, use_rope: bool = True,
+            act_q: dict | None = None) -> jax.Array:
+    """Project + (qk_norm) + rope the query — exactly what the paged
+    attends compute before attending, factored out so the attn_q
+    calibration capture and the attends themselves share one code path.
+    Returns [B, S, H, hd] float."""
     dt = x.dtype
     q = ll.dense_general(_q(x, act_q, "attn_in"), p["wq"],
                          "bsd,dnh->bsnh", dtype=dt)
@@ -491,14 +589,7 @@ def mha_prefill_paged(
         q = apply_head_rms(p["q_norm"], q)
     if use_rope:
         q = rope(q, positions, cfg.rope_theta)
-    b, s, h, hd = q.shape
-    groups = cfg.num_heads // cfg.num_kv_heads
-    qg = q.reshape(b, s, cfg.num_kv_heads, groups, hd)
-    out = flash_prefill_paged(qg, k_pages, v_pages, block_tables,
-                              q_start, kv_lens)
-    out = out.reshape(b, s, h, hd).astype(dt)
-    return ll.dense_general(_q(out, act_q, "attn_out"), p["wo"],
-                            "bsnh,nhd->bsd", dtype=dt)
+    return q
 
 
 def self_kv(p: Params, x: jax.Array, cfg: ModelConfig,

@@ -299,6 +299,11 @@ def prefill_into_cache(
         h = L.apply_norm(blk_params["ln1"], x, cfg)
         k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions,
                                  act_q=aq)
+        if k_pages_l.dtype == jnp.uint8:
+            # codes-mode cache: quantize-at-write through the per-head
+            # attn_k/attn_v metas (a u8 page stores DNA-TEQ codes, and
+            # a raw astype would bit-truncate floats into junk codes)
+            k_new, v_new = L.encode_kv_codes(k_new, v_new, aq)
         k_pages_l = k_pages_l.at[page, off].set(
             k_new.astype(k_pages_l.dtype))
         v_pages_l = v_pages_l.at[page, off].set(
@@ -360,6 +365,9 @@ def decode_step_paged(params, view, tokens: jax.Array, active: jax.Array,
         h = L.apply_norm(blk_params["ln1"], x, cfg)
         k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions,
                                  act_q=aq)
+        if k_pages_l.dtype == jnp.uint8:
+            # codes-mode cache: quantize-at-write (see prefill body)
+            k_new, v_new = L.encode_kv_codes(k_new, v_new, aq)
         k_pages_l = _scatter_token_kv(k_pages_l, k_new[:, 0], blk_idx, off)
         v_pages_l = _scatter_token_kv(v_pages_l, v_new[:, 0], blk_idx, off)
         attn = L.mha_decode_paged(blk_params["attn"], h, cfg, positions,
@@ -390,11 +398,14 @@ def collect_act_calibration(params, tokens: jax.Array, cfg: ModelConfig):
     (:data:`repro.models.layers.ACT_SITES`): attn_in (ln1 output →
     wq/wk/wv), attn_out (attention context → wo), mlp_in (ln2 output →
     gate/up), mlp_mid (MLP intermediate → w_down; dense blocks only —
-    MoE expert intermediates stay fp, see DESIGN.md).  Returns
-    ``{site: [L, B, S, ...]}`` stacked by the layer scan; the runtime
-    fits per-(layer, site) ``ExpQuantParams`` on these samples.  Runs on
-    the params as-is (no act_q consulted), so the captured tensors are
-    the float values the quantizer will stand in for."""
+    MoE expert intermediates stay fp, see DESIGN.md), plus the
+    attention-boundary sites the codes-mode KV cache needs: attn_q (the
+    roped query the flash kernels consume), attn_k/attn_v (the roped
+    keys / raw values a u8 KV page stores — fit per head downstream).
+    Returns ``{site: [L, B, S, ...]}`` stacked by the layer scan; the
+    runtime fits per-(layer, site) ``ExpQuantParams`` on these samples.
+    Runs on the params as-is (no act_q consulted), so the captured
+    tensors are the float values the quantizer will stand in for."""
     x = L.embed_tokens(params["embed"], tokens, cfg)
     b, s, _ = x.shape
     positions = jnp.broadcast_to(jnp.arange(s), (b, s))
@@ -407,7 +418,10 @@ def collect_act_calibration(params, tokens: jax.Array, cfg: ModelConfig):
                           return_ctx=True)
         x = x + attn
         h2 = L.apply_norm(blk_params["ln2"], x, cfg)
-        sites = {"attn_in": h1, "attn_out": ctx, "mlp_in": h2}
+        q_cal = L.roped_q(blk_params["attn"], h1, cfg, positions)
+        k_cal, v_cal = L.self_kv(blk_params["attn"], h1, cfg, positions)
+        sites = {"attn_in": h1, "attn_out": ctx, "mlp_in": h2,
+                 "attn_q": q_cal, "attn_k": k_cal, "attn_v": v_cal}
         if cfg.is_moe:
             y, _ = M.apply_moe(blk_params["moe"], h2, cfg)
         else:

@@ -14,20 +14,33 @@ own (alpha, beta, base) via the alternating-LS / base-grid search in
 The fitted metas ride the params tree as
 ``params["blocks"]["act_q"][site] = {"lut": [L, 256], "qmeta": [L, 4]}``
 so ``lax.scan`` slices one table per layer and the jitted serving steps
-need no new arguments.
+need no new arguments.  The KV sites (``attn_k``/``attn_v`` — what the
+codes-mode KV cache stores) are fit **per head**: attention heads see
+very different key/value scales, so each head gets its own (alpha,
+beta, base) — ``{"lut": [L, n_kv, 256], "qmeta": [L, n_kv, 4]}`` —
+which is the accuracy lever when attention goes to codes.  ``attn_q``
+(the roped query fed to the flash kernels) stays per-tensor: it is
+consumed against all heads' K tables at once.
 
 **Calibration cache.**  Fits are memoized on disk next to the kernel
 autotuner cache (same discipline: atomic tmp+rename writes, versioned):
 
 ```json
-{"version": 1,
+{"version": 2,
  "entries": {
    "<cfg.name>|L<num_layers>|d<d_model>|f<d_ff>|b<bits>|"
    "c<n_prompts>x<seq_len>|p<prompts_crc32>|s<seed>|w<params_fingerprint>":
    {"sites": {"attn_in": [[alpha, beta, base, bits], ...one per layer],
+              "attn_k": [[[alpha, beta, base, bits], ...one per head],
+                         ...one per layer],
               ...},
-    "sqnr_db": {"attn_in": [...], ...}}}}
+    "sqnr_db": {"attn_in": [...], "attn_k": [[...per head], ...], ...}}}}
 ```
+
+Version 2 added the attention-boundary sites (``attn_q`` per-layer,
+``attn_k``/``attn_v`` per-layer-per-head); the version check below
+cleanly invalidates v1 caches — a v1 blob is ignored on load and
+overwritten wholesale on the next save, never merged.
 
 * location: ``~/.cache/repro/act_quant_calib.json`` (override:
   ``REPRO_ACT_CALIB_CACHE``);
@@ -51,7 +64,13 @@ import numpy as np
 
 from repro.core import exponential_quant as eq
 
-_CALIB_VERSION = 1
+_CALIB_VERSION = 2
+
+# Sites fit per-channel along a head axis of the captured sample
+# (``{site: axis}`` — axis is relative to the [L, ...sample...] stack).
+# attn_k/attn_v feed the codes-mode KV cache: the captured tensors are
+# [L, B, S, n_kv, hd], so the head axis is -2.
+PER_HEAD_SITES: dict[str, int] = {"attn_k": -2, "attn_v": -2}
 
 # Base grid for *activation* fits: extends the weight-side default
 # (2^(1/k), k ≤ 16) with much finer steps, down to 2^(1/256) ≈ 1.0027.
@@ -111,13 +130,25 @@ def lut_from_qmeta(qmeta: jax.Array) -> jax.Array:
     return eq.decode_meta(jnp.arange(256, dtype=jnp.int32), qmeta)
 
 
+def _luts_from_qmeta(qmeta: jax.Array) -> jax.Array:
+    """``[..., 4]`` packed metas -> ``[..., 256]`` decode tables (vmap
+    over every leading dim, so per-layer and per-layer-per-head metas
+    build through the same code path)."""
+    f = lut_from_qmeta
+    for _ in range(qmeta.ndim - 1):
+        f = jax.vmap(f)
+    return f(qmeta)
+
+
 def fit_sites(samples: dict, bits: int):
     """Fit per-(layer, site) params on captured activations.
 
     ``samples`` is ``{site: [L, ...]}`` from the model's calibration
     hook.  Returns ``(act_q, report)`` where ``act_q`` maps each site
-    to ``{"lut": [L, 256], "qmeta": [L, 4]}`` and ``report`` to the
-    per-layer round-trip SQNR in dB."""
+    to ``{"lut": [L, 256], "qmeta": [L, 4]}`` — or, for the per-head KV
+    sites (:data:`PER_HEAD_SITES`), ``{"lut": [L, n_kv, 256], "qmeta":
+    [L, n_kv, 4]}`` — and ``report`` to the round-trip SQNR in dB with
+    the same nesting (per layer, or per layer per head)."""
     def fit_one(t):
         qp = eq.fit(t.reshape(-1).astype(jnp.float32), bits,
                     bases=ACT_BASES, iters=ACT_FIT_ITERS)
@@ -125,10 +156,15 @@ def fit_sites(samples: dict, bits: int):
 
     act_q, report = {}, {}
     for site, x_l in samples.items():
-        metas, sqnrs = jax.vmap(fit_one)(x_l)
-        act_q[site] = {"lut": jax.vmap(lut_from_qmeta)(metas),
-                       "qmeta": metas}
-        report[site] = [float(s) for s in np.asarray(sqnrs)]
+        fit = jax.vmap(fit_one)
+        if site in PER_HEAD_SITES:
+            ax = PER_HEAD_SITES[site] % x_l.ndim
+            x_l = jnp.moveaxis(x_l, ax, 1)          # [L, n_kv, ...]
+            x_l = x_l.reshape(x_l.shape[0], x_l.shape[1], -1)
+            fit = jax.vmap(fit)
+        metas, sqnrs = fit(x_l)
+        act_q[site] = {"lut": _luts_from_qmeta(metas), "qmeta": metas}
+        report[site] = np.asarray(sqnrs, np.float64).tolist()
     return act_q, report
 
 
@@ -136,8 +172,7 @@ def _act_q_from_entry(entry: dict):
     act_q = {}
     for site, metas in entry["sites"].items():
         qmeta = jnp.asarray(metas, jnp.float32)
-        act_q[site] = {"lut": jax.vmap(lut_from_qmeta)(qmeta),
-                       "qmeta": qmeta}
+        act_q[site] = {"lut": _luts_from_qmeta(qmeta), "qmeta": qmeta}
     return act_q, {s: list(v) for s, v in entry.get("sqnr_db", {}).items()}
 
 
@@ -233,4 +268,5 @@ def calibrate_act_quant(api, params, cfg, bits: int,
 
 
 __all__ = ["calibrate_act_quant", "attach_act_quant", "fit_sites",
-           "cache_path", "calib_key", "lut_from_qmeta"]
+           "cache_path", "calib_key", "lut_from_qmeta",
+           "PER_HEAD_SITES"]

@@ -319,6 +319,7 @@ class Engine:
                  calib_prompts=None,
                  engine: EngineConfig | None = None,
                  kv_dtype: str | jnp.dtype = "float32",
+                 kv_codes: bool = False,
                  chaos: ChaosConfig | ChaosInjector | None = None,
                  telemetry: Telemetry | None = None,
                  worker_name: str = "", worker_id: int = 0):
@@ -346,6 +347,17 @@ class Engine:
         self._checksum = ec.checksum_pages or (
             self.chaos is not None and self.chaos.cfg.corrupt_rate > 0)
         self.kv_dtype = jnp.dtype(kv_dtype)
+        self.kv_codes = bool(kv_codes)
+        if self.kv_codes:
+            if act_quant is None:
+                raise ValueError(
+                    "kv_codes=True requires act_quant bits: the per-head "
+                    "K/V code tables come from activation calibration")
+            # codes-mode cache: pages hold u8 DNA-TEQ exponent codes
+            # (1 B/elem); the attention kernels decode them through
+            # per-head LUTs in VMEM and the block is code-in/code-out
+            # through attention
+            self.kv_dtype = jnp.dtype(jnp.uint8)
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
                                    dtype=jnp.float32)
@@ -746,6 +758,29 @@ class Engine:
                                     tok_s=self._tick_tokens / dt_tick)
         return finished
 
+    def _attn_accounting(self, q_tokens: int, kv_tokens: int) -> None:
+        """Analytic attention-boundary traffic for one dispatched row:
+        bytes the attention kernel reads (q + touched KV pages),
+        activation bytes crossing the boundary (q in + context out —
+        the tensors whose width ``kv_codes`` changes), and elements
+        LUT-decoded in-kernel.  Computed from shapes — the jitted
+        kernels cannot count, and the model is exact for the dense
+        page-block access pattern both kernels use."""
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim
+        n_kv = cfg.num_kv_heads
+        bs = self.engine_cfg.block_size
+        act_item = 1 if self.kv_codes else 4       # u8 codes vs f32
+        q_bytes = q_tokens * cfg.num_heads * hd * act_item
+        out_bytes = q_tokens * cfg.num_heads * hd * act_item
+        blocks = -(-kv_tokens // bs)
+        kv_bytes = blocks * bs * n_kv * hd * 2 * self.kv_dtype.itemsize
+        self.attn_bytes_read += q_bytes + kv_bytes
+        self.attn_act_bytes += q_bytes + out_bytes
+        if self.kv_codes:
+            self.attn_dequants += (q_tokens * cfg.num_heads * hd
+                                   + blocks * bs * n_kv * hd * 2)
+
     def _decode_tick(self, active) -> list[Completion]:
         # grow any sequence whose next write crosses a block boundary —
         # oldest first, so page pressure falls on the youngest (it is
@@ -766,6 +801,7 @@ class Engine:
             tokens[i, 0] = st.next_token
             active_mask[i] = True
             pre_pos[i] = int(self.cache.lengths[i])
+            self._attn_accounting(1, pre_pos[i] + 1)
 
         t0 = self._clock()
         nxt_dev, ok_dev, view = self._decode(
@@ -1476,6 +1512,7 @@ class Engine:
             takes[i] = take
             self.prefill_tokens_computed += take
             self._tick_tokens += take
+            self._attn_accounting(take, s0 + take)
             cols_need = max(cols_need, -(-(s0 + take) // bs))
         self.prefill_batches += 1
         cols = min(self._pow2(cols_need), self.cache.max_blocks_per_seq)
@@ -1596,6 +1633,15 @@ _ENGINE_COUNTERS = {
         ("engine.faults.nan_rows", "non-finite logits rows quarantined"),
     "corruptions_detected":
         ("engine.faults.corruptions", "CRC mismatches caught"),
+    "attn_bytes_read":
+        ("engine.attn.bytes_read", "attention kernel input bytes "
+                                   "(q + KV pages), analytic"),
+    "attn_act_bytes":
+        ("engine.attn.bytes_act", "activation bytes crossing the "
+                                  "attention boundary (q in, ctx out)"),
+    "attn_dequants":
+        ("engine.attn.dequants", "elements LUT-decoded inside the "
+                                 "attention kernels (codes mode)"),
     "slow_ticks":
         ("engine.faults.slow_ticks", "watchdog-flagged scheduler ticks"),
     "quarantines":

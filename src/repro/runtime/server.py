@@ -42,6 +42,7 @@ class InferenceServer:
                  quant_bits: int | None = None,
                  act_quant: int | None = None, max_len: int = 512,
                  kv_dtype: str | jnp.dtype = "float32",
+                 kv_codes: bool = False,
                  num_slots: int = 8, block_size: int = 16,
                  prefix_cache: bool = True, prefill_chunk: int = 256,
                  max_queue: int | None = None,
@@ -62,11 +63,17 @@ class InferenceServer:
         §II-C): the engine fits per-(layer, site) params on sample
         prompts at startup (disk-cached) and every covered matmul runs
         the dual-LUT kernel — applies to the Engine path only (the
-        bucketed fallback stays fp-act)."""
+        bucketed fallback stays fp-act).  ``kv_codes`` stores KV pages
+        as calibrated u8 DNA-TEQ exponent codes decoded through
+        per-head LUTs inside the attention kernels (requires
+        ``act_quant``); applies to the Engine path only."""
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         self.max_len = max_len
         self.kv_dtype = jnp.dtype(kv_dtype)
+        self.kv_codes = bool(kv_codes)
+        if self.kv_codes and act_quant is None:
+            raise ValueError("kv_codes=True requires act_quant bits")
         self.num_slots = num_slots
         self.block_size = block_size
         self.prefix_cache = prefix_cache
@@ -119,7 +126,8 @@ class InferenceServer:
         if self.last_engine is None or self.last_engine.engine_cfg != ec:
             self.last_engine = Engine(self.cfg, params=self.params,
                                       act_quant=self.act_quant,
-                                      engine=ec, kv_dtype=self.kv_dtype)
+                                      engine=ec, kv_dtype=self.kv_dtype,
+                                      kv_codes=self.kv_codes)
         return self.last_engine
 
     def generate(self, requests: Sequence[Request]) -> list[Completion]:

@@ -322,10 +322,16 @@ class TestCalibration:
                                            path=path)
         assert set(rep1) == set(L.ACT_SITES)
         aq = p1["blocks"]["act_q"]
+        n_kv = cfg.num_kv_heads
         for site in L.ACT_SITES:
-            assert aq[site]["lut"].shape == (cfg.num_layers, 256)
-            assert aq[site]["qmeta"].shape == (cfg.num_layers, 4)
-        assert all(s > 10.0 for v in rep1.values() for s in v), rep1
+            if site in cal.PER_HEAD_SITES:
+                assert aq[site]["lut"].shape == (cfg.num_layers, n_kv, 256)
+                assert aq[site]["qmeta"].shape == (cfg.num_layers, n_kv, 4)
+            else:
+                assert aq[site]["lut"].shape == (cfg.num_layers, 256)
+                assert aq[site]["qmeta"].shape == (cfg.num_layers, 4)
+        assert all(s > 10.0 for v in rep1.values()
+                   for s in np.asarray(v).ravel()), rep1
         # second call must be a pure cache hit with bit-identical tables
         with mock.patch.object(cal, "fit_sites",
                                side_effect=AssertionError("re-fit")):
@@ -335,8 +341,13 @@ class TestCalibration:
             np.testing.assert_array_equal(
                 np.asarray(aq[site]["lut"]),
                 np.asarray(p2["blocks"]["act_q"][site]["lut"]))
-        assert {s: [round(x, 4) for x in v] for s, v in rep2.items()} \
-            == {s: [round(x, 4) for x in v] for s, v in rep1.items()}
+        r1 = {s: np.round(np.asarray(v, np.float64), 4)
+              for s, v in rep1.items()}
+        r2 = {s: np.round(np.asarray(v, np.float64), 4)
+              for s, v in rep2.items()}
+        assert set(r1) == set(r2)
+        for s in r1:
+            np.testing.assert_array_equal(r1[s], r2[s])
 
     def test_key_separates_weight_sets_and_prompt_content(self):
         cfg = self._cfg()
@@ -372,13 +383,40 @@ class TestCalibration:
         path = str(tmp_path / "calib.json")
         cal.calibrate_act_quant(api, params, cfg, bits=7, path=path)
         blob = json.load(open(path))
-        assert blob["version"] == 1
+        assert blob["version"] == 2
         (key, entry), = blob["entries"].items()
         assert f"|b7|" in key and cfg.name in key
         for site in L.ACT_SITES:
-            metas = entry["sites"][site]
-            assert len(metas) == cfg.num_layers
-            assert all(len(m) == 4 for m in metas)
+            metas = np.asarray(entry["sites"][site])
+            if site in cal.PER_HEAD_SITES:
+                assert metas.shape == (cfg.num_layers,
+                                       cfg.num_kv_heads, 4)
+            else:
+                assert metas.shape == (cfg.num_layers, 4)
+
+    def test_v1_cache_invalidated(self, tmp_path):
+        """A v1 blob (pre attention-site calibration) must be ignored
+        on load — the engine re-fits rather than serving stale metas
+        missing the attn_q/attn_k/attn_v sites."""
+        cfg = self._cfg()
+        api = mapi.get_model(cfg)
+        params = api.init(jax.random.PRNGKey(0), dtype=jnp.float32)
+        path = str(tmp_path / "calib.json")
+        prompts = np.arange(4 * 32, dtype=np.int32).reshape(4, 32) % 17
+        key = cal.calib_key(cfg, 7, prompts, 0, params)
+        (tmp_path / "calib.json").write_text(json.dumps(
+            {"version": 1,
+             "entries": {key: {"sites": {"attn_in": [[1.0, 0.0, 2.0, 7]]
+                                         * cfg.num_layers},
+                               "sqnr_db": {}}}}))
+        p1, rep = cal.calibrate_act_quant(api, params, cfg, bits=7,
+                                          prompts=prompts, path=path)
+        # a real fit ran (v1 entry has no KV sites) and the rewritten
+        # blob is wholesale v2 — the stale entry is gone, not merged
+        assert set(rep) == set(L.ACT_SITES)
+        blob = json.load(open(path))
+        assert blob["version"] == 2
+        assert set(blob["entries"][key]["sites"]) == set(L.ACT_SITES)
 
 
 # --------------------------------------------- autotuner cache keys --

@@ -148,6 +148,35 @@ class TestFaultSites:
         assert eng.replay_artifacts[0]["kind"] == "kv_corruption"
         assert not eng.pending
 
+    def test_corrupt_codes_page_fails_owner(self, tmp_path, monkeypatch):
+        """The same KV bit flip on a kv_codes=True engine: pages hold
+        uint8 DNA-TEQ exponent codes, corrupt_page writes a valid code
+        (7 or 11 are in-range for u8), so only the CRC audit — not a
+        dtype accident — can catch it.  Detection, owner failure, and
+        the replay artifact all behave exactly as on f32 pages."""
+        monkeypatch.setenv("REPRO_ACT_CALIB_CACHE",
+                           str(tmp_path / "act_calib.json"))
+        cfg = tiny_cfg()
+        eng = Engine(cfg, act_quant=7, kv_codes=True,
+                     engine=EngineConfig(num_slots=2, block_size=8,
+                                         max_seq_len=96,
+                                         checksum_pages=True))
+        assert eng.cache.k_pages.dtype == np.uint8
+        eng.submit(Request(0, mixed_requests(cfg, 1)[0].prompt,
+                           max_new_tokens=16))
+        for _ in range(3):
+            eng.step()
+        page = int(eng.cache.block_tables[0, 0])
+        assert page in eng._page_crc
+        eng.cache.corrupt_page(page)
+        assert eng.cache.k_pages.dtype == np.uint8   # flip stayed in-band
+        eng.step()
+        eng.check_partition()
+        assert eng.corruptions_detected == 1
+        assert eng.result(0).status == ST_FAILED
+        assert eng.replay_artifacts[0]["kind"] == "kv_corruption"
+        assert not eng.pending
+
     def test_corrupt_trie_page_drops_subtree(self):
         """Corruption in a cached page drops the whole trie branch (its
         descendants spell prefixes through it); the next request simply

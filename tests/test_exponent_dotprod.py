@@ -46,6 +46,35 @@ def test_counting_matmul_equals_dequant_matmul():
     np.testing.assert_allclose(m_count, m_deq, rtol=2e-4, atol=1e-5)
 
 
+def test_serving_codes_oracle_matches_eq1():
+    """The codes-mode attention oracles' q·k contraction (per-head LUT
+    decode then an MXU einsum — the page-scan refs in repro.kernels)
+    IS the dequant_matmul formulation, and therefore Eq.1-consistent
+    with the counting formulation when the two quantizers share a base
+    (per layer pair, as in the paper)."""
+    from repro.kernels._codes import decode_heads
+
+    r = np.random.default_rng(4)
+    g, s, hd = 4, 32, 16
+    q = jnp.asarray(r.normal(size=(g, hd)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(s, hd)), jnp.float32)
+    cq, pq = eq.quantize(q, 7)
+    pk0 = eq.fit(k, 7)
+    pk = eq.ExpQuantParams(pk0.alpha, pk0.beta, pq.base, 7)
+    ck = eq.encode(k, pk)
+    # the serving oracle's decode path: q through its 256-entry table,
+    # k through the per-head LUT helper both kernels and refs share
+    qd = jnp.take(eq.decode_table(pq), cq.astype(jnp.int32), axis=0)
+    kd = decode_heads(eq.decode_table(pk)[None], ck[:, None, :])
+    logits = jnp.einsum("gh,sh->gs", qd, kd[:, 0, :],
+                        preferred_element_type=jnp.float32)
+    m_deq = np.asarray(ed.dequant_matmul(cq, pq, ck.T, pk))
+    np.testing.assert_allclose(np.asarray(logits), m_deq,
+                               rtol=1e-6, atol=1e-6)
+    m_count = np.asarray(ed.counting_matmul(cq, pq, ck.T, pk))
+    np.testing.assert_allclose(m_count, m_deq, rtol=2e-4, atol=1e-4)
+
+
 def test_dot_approximates_float(rng):
     (a, ca, pa), (w, cw, pw) = _pair(2, 1024, 7, 7)
     true = float(jnp.dot(a, w))
