@@ -12,6 +12,7 @@ trajectory.
 
 from __future__ import annotations
 
+import dataclasses
 import json
 import sys
 import time
@@ -328,6 +329,133 @@ def kvcodes_rows() -> list[dict]:
              "derived": f"mean round-trip SQNR over {sq.size} calibrated "
                         f"{site} tables"})
     return rows
+
+
+def spec_rows() -> list[dict]:
+    """Speculative decoding: prompt-lookup drafting + one chunked-flash
+    verification dispatch per tick, spec_k=6 vs the vanilla
+    single-token engine on the SAME streams and weights.
+
+    The repetitive stream is constructed the way prompt-lookup's home
+    turf looks in production — continuations that literally repeat
+    spans the context already contains.  A random tiny model has no
+    induction behaviour to exploit, so the stream is built from the
+    model's *own* greedy rollouts: roll candidate seeds forward, keep
+    the most self-repeating streams (greedy decode on tiny random
+    weights settles into quasi-periodic cycles), and serve each prompt
+    as seed + the first part of its rollout.  Decode then reproduces
+    the rollout's tail, whose spans the drafter finds verbatim in the
+    prompt — exactly the extraction/shared-prefix regime, built from
+    what this model can actually predict.  The adversarial stream is
+    the honest other end: non-repeating random prompts where the
+    drafter rarely pays off.  Token agreement vs the non-speculative
+    engine must be exactly 1.0 on BOTH — greedy argmax acceptance is
+    exact, not approximate."""
+    from repro.configs import get_config
+    from repro.runtime.drafter import PromptLookupDrafter
+    from repro.runtime.engine import Engine, EngineConfig, Request
+
+    cfg = get_config("qwen3-1.7b", tiny=True).replace(
+        num_layers=2, d_model=64, d_ff=192, compute_dtype="float32",
+        vocab_size=32)
+    rng = np.random.default_rng(5)
+    ecfg = EngineConfig(num_slots=4, block_size=32, max_seq_len=128)
+    baseline = Engine(cfg, rng_seed=0, engine=ecfg)
+
+    # bootstrap: score candidate seeds by how predictable their greedy
+    # rollout is to the drafter (mean accepted tokens per position)
+    cands = [rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+             for _ in range(48)]
+    boots = baseline.generate(
+        [Request(i, s, max_new_tokens=96) for i, s in enumerate(cands)])
+    dr = PromptLookupDrafter(8)
+    scored = []
+    for s, b in zip(cands, boots):
+        full = np.concatenate([s, np.asarray(b.tokens, np.int32)])
+        hit = 0
+        for pos in range(32, len(full) - 1):
+            for j, t in enumerate(dr.propose(full[:pos])):
+                if pos + j < len(full) and t == full[pos + j]:
+                    hit += 1
+                else:
+                    break
+        scored.append((hit / (len(full) - 33), s, b))
+    scored.sort(key=lambda t: -t[0])
+    top = [np.concatenate([s, np.asarray(b.tokens[:40], np.int32)])
+           for _, s, b in scored[:4]]
+    rep_prompts = top * 3               # three uniform four-slot waves
+    # adversarial: every prompt token distinct (one permutation of the
+    # vocab), so drafting starts with nothing to look up; as decode
+    # emits tokens the tiny vocab inevitably starts repeating, so the
+    # accept rate is whatever the stream earns — reported as measured
+    adv_prompts = [rng.permutation(cfg.vocab_size).astype(np.int32)
+                   for _ in range(12)]
+
+    spec = Engine(cfg, params=baseline.params,
+                  engine=dataclasses.replace(ecfg, spec_k=6))
+    uid = [0]
+
+    def reqs(prompts):
+        uid[0] += 100                  # fresh uids per submission wave
+        return [Request(uid[0] + i, p, max_new_tokens=64)
+                for i, p in enumerate(prompts)]
+
+    def run(eng, prompts):
+        eng.generate(reqs(prompts))     # warm the jit caches (both the
+        eng.generate(reqs(prompts))     # cold and prefix-hit prefills)
+        p0, a0 = eng.spec_proposed, eng.spec_accepted
+        best = 0.0
+        for _ in range(3):              # decode tok/s: time the decode
+            outs = []                   # ticks themselves (best-of-3 —
+            decode_s = 0.0              # sub-ms ticks, host jitter is
+            for r in reqs(prompts):     # not signal)
+                eng.submit(r)
+            while eng.pending:
+                d0 = eng.total_decode_steps
+                t0 = time.perf_counter()
+                outs.extend(eng.step())
+                dt = time.perf_counter() - t0
+                if eng.total_decode_steps > d0:
+                    decode_s += dt
+            best = max(best,
+                       sum(len(c.tokens) for c in outs) / decode_s)
+        outs.sort(key=lambda c: c.uid)  # finish order -> prompt order
+        prop = eng.spec_proposed - p0
+        acc = eng.spec_accepted - a0
+        return outs, best, (acc / prop if prop else 0.0), prop
+
+    base_rep, base_rep_tps, _, _ = run(baseline, rep_prompts)
+    spec_rep, spec_rep_tps, rep_accept, rep_prop = run(spec, rep_prompts)
+    base_adv, base_adv_tps, _, _ = run(baseline, adv_prompts)
+    spec_adv, spec_adv_tps, adv_accept, adv_prop = run(spec, adv_prompts)
+    agree = float(np.mean(
+        [np.mean(a.tokens == b.tokens)
+         for a, b in zip(base_rep + base_adv, spec_rep + spec_adv)]))
+    return [
+        {"name": "spec/spec_tok_s", "tok_s": spec_rep_tps,
+         "derived": "spec_k=6 prompt-lookup speculation, repetitive/"
+                    "shared-prefix stream (drafting's home turf)"},
+        {"name": "spec/baseline_tok_s", "tok_s": base_rep_tps,
+         "derived": "same weights and stream, spec_k=0 single-token "
+                    "decode"},
+        {"name": "spec/speedup", "value": spec_rep_tps / base_rep_tps,
+         "derived": "spec/baseline tok/s on the repetitive stream "
+                    "(CI asserts >= 1.0)"},
+        {"name": "spec/token_agreement", "value": agree,
+         "derived": "spec vs non-speculative greedy tokens, both "
+                    "streams (CI asserts == 1.0: acceptance is exact)"},
+        {"name": "spec/accept_rate", "value": rep_accept,
+         "derived": f"drafted tokens accepted / verified on the "
+                    f"repetitive stream ({rep_prop} proposed)"},
+        {"name": "spec/adversarial_spec_tok_s", "tok_s": spec_adv_tps,
+         "derived": "spec_k=6 on all-distinct-token prompts — honest "
+                    "worst case, reported even when <= 1x"},
+        {"name": "spec/adversarial_baseline_tok_s", "tok_s": base_adv_tps,
+         "derived": "spec_k=0 on the same adversarial stream"},
+        {"name": "spec/adversarial_accept_rate", "value": adv_accept,
+         "derived": f"accept rate on the adversarial stream "
+                    f"({adv_prop} proposed)"},
+    ]
 
 
 # ---------------------------------------------------------------------
@@ -909,6 +1037,7 @@ SERVING_SCENARIOS = {
     "disagg": disagg_rows,
     "telemetry": telemetry_rows,
     "kvcodes": kvcodes_rows,
+    "spec": spec_rows,
 }
 
 

@@ -79,7 +79,12 @@ def main():
                     help="store KV pages as calibrated u8 DNA-TEQ "
                          "exponent codes decoded through per-head LUTs "
                          "inside the attention kernels (requires "
-                         "--act-quant; engine path only)")
+                         "--act-quant; engine and cluster paths)")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: max prompt-lookup draft "
+                         "tokens verified per decode tick (0 disables; "
+                         "greedy acceptance is exact, so served tokens "
+                         "are identical either way)")
     ap.add_argument("--bucketed", action="store_true",
                     help="legacy length-bucketed contiguous-cache path")
     ap.add_argument("--no-prefix-cache", action="store_true",
@@ -133,8 +138,13 @@ def main():
     if args.kv_codes:
         if args.act_quant is None:
             ap.error("--kv-codes requires --act-quant")
-        if args.bucketed or disagg:
-            ap.error("--kv-codes applies to the unified engine path only")
+        if args.bucketed:
+            ap.error("--kv-codes applies to the engine and cluster "
+                     "paths only")
+    if args.spec_k < 0:
+        ap.error("--spec-k must be >= 0")
+    if args.spec_k and args.bucketed:
+        ap.error("--spec-k applies to the engine and cluster paths only")
     if args.bucketed and (args.trace or args.metrics_json):
         print("note: --trace/--metrics-json apply to the engine and "
               "cluster paths only; the bucketed baseline is untraced")
@@ -157,7 +167,7 @@ def main():
     if disagg:
         clu = Cluster(
             cfg, quant_bits=args.quant, act_quant=args.act_quant,
-            kv_dtype=args.kv_dtype,
+            kv_dtype=args.kv_dtype, kv_codes=args.kv_codes,
             chaos=(None if args.chaos is None
                    else ChaosConfig.storm(args.chaos)),
             telemetry=tel,
@@ -173,7 +183,8 @@ def main():
                                 prefix_cache=not args.no_prefix_cache,
                                 prefill_chunk=args.prefill_chunk,
                                 max_queue=args.max_queue,
-                                shed_policy=args.shed_policy))
+                                shed_policy=args.shed_policy,
+                                spec_k=args.spec_k))
         t0 = time.time()
         try:
             outs = clu.generate(reqs)
@@ -219,7 +230,8 @@ def main():
                                 prefix_cache=not args.no_prefix_cache,
                                 prefill_chunk=args.prefill_chunk,
                                 max_queue=args.max_queue,
-                                shed_policy=args.shed_policy))
+                                shed_policy=args.shed_policy,
+                                spec_k=args.spec_k))
         # graceful SIGINT drain: first ^C stops admitting (queued
         # requests go terminal with status=rejected) while running
         # slots finish; a second ^C raises KeyboardInterrupt as usual

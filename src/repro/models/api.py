@@ -40,6 +40,11 @@ class ModelAPI:
     # positions straight from the pages via the chunked flash kernel.
     prefill_into_cache: Callable | None = None
     decode_step_paged: Callable | None = None
+    # Speculative-decoding verification: one chunked-flash dispatch
+    # scoring a window of next-token + k drafted continuations per row,
+    # returning per-row greedy tokens and accept counts — see
+    # repro.models.transformer.spec_verify_into_cache.
+    spec_verify_into_cache: Callable | None = None
     # DNA-TEQ activation-quantization calibration hook: one forward
     # over sample prompts returning per-(layer, site) float activation
     # samples for the runtime to fit ExpQuantParams on (None for
@@ -86,6 +91,8 @@ def get_model(cfg: ModelConfig) -> ModelAPI:
         abstract_cache=mod.abstract_cache,
         prefill_into_cache=getattr(mod, "prefill_into_cache", None),
         decode_step_paged=getattr(mod, "decode_step_paged", None),
+        spec_verify_into_cache=getattr(mod, "spec_verify_into_cache",
+                                       None),
         collect_act_calibration=getattr(mod, "collect_act_calibration",
                                         None),
     )

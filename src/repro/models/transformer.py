@@ -390,6 +390,108 @@ def decode_step_paged(params, view, tokens: jax.Array, active: jax.Array,
                                  lengths=new_lengths)
 
 
+def spec_verify_into_cache(
+    params,
+    tokens: jax.Array,                 # [B, S] — next token + k drafts
+    view,                              # PagedView for the dispatched rows
+    cfg: ModelConfig,
+    start_pos: jax.Array,              # [B] int32 — abs pos of tokens[:,0]
+    n_tokens: jax.Array,               # [B] int32 — valid tokens per row
+):
+    """Score a speculative window — the engine's verify-and-commit
+    dispatch.  ``tokens[b]`` is the row's *undecoded* next token
+    followed by up to ``S-1`` drafted continuations; ``n_tokens[b]``
+    of them are real (0 parks an idle row in a mixed tick, 1 is an
+    ordinary single-token decode step riding the spec dispatch).
+
+    Mechanically this is :func:`prefill_into_cache` with the valid
+    count supplied by the caller instead of derived from
+    ``view.lengths``: every valid position's KV scatters into the
+    pages first (codes-mode pages quantize-at-write, padding goes to
+    the trash page), then the chunked flash kernel attends each
+    position against the cached prefix plus the window's own causal
+    left — so position ``i``'s logits are computed *as if* drafts
+    ``< i`` were already accepted.
+
+    The greedy commit happens in-dispatch (one host round-trip per
+    tick, same policy as the decode step): returns
+
+    - ``greedy [B, S]`` — argmax token at every window position,
+    - ``accept [B]`` — leading run length where the model's argmax
+      reproduces the drafts (``0 <= accept <= n_tokens-1``); the
+      engine commits ``drafts[:accept]`` plus ``greedy[accept]``,
+    - ``ok [B]`` — all-finite logits over the row's valid positions
+      (vacuously True for parked rows),
+    - the updated view (``lengths`` pass through untouched — the
+      engine owns the commit/rewind arithmetic).
+
+    Rejected positions need no undo: their KV stays in owned pages
+    beyond the committed length, masked out of every later attend by
+    ``kv_lens`` until the next write overwrites it.
+    """
+    x = L.embed_tokens(params["embed"], tokens, cfg)
+    b, s, _ = x.shape
+    bs = view.block_size
+    max_blk = view.block_tables.shape[1]
+    start = start_pos.astype(jnp.int32)                       # [B]
+    valid = jnp.clip(n_tokens.astype(jnp.int32), 0, s)        # [B]
+    kv_lens = jnp.where(valid > 0, start + valid, 0)          # [B]
+    positions = start[:, None] + jnp.arange(s)[None, :]       # [B, S]
+
+    tok_ok = ((jnp.arange(s)[None, :] < valid[:, None])
+              & (positions // bs < max_blk))                  # [B, S]
+    col = jnp.where(tok_ok, positions // bs, 0)
+    page = jnp.where(tok_ok,
+                     jnp.take_along_axis(view.block_tables, col, axis=1),
+                     0)                                       # trash page
+    off = jnp.where(tok_ok, positions % bs, 0)
+
+    def body(carry, layer_in):
+        x, aux = carry
+        blk_params, k_pages_l, v_pages_l = layer_in
+        aq = blk_params.get("act_q")
+        h = L.apply_norm(blk_params["ln1"], x, cfg)
+        k_new, v_new = L.self_kv(blk_params["attn"], h, cfg, positions,
+                                 act_q=aq)
+        if k_pages_l.dtype == jnp.uint8:
+            # codes-mode cache: quantize-at-write (see prefill body)
+            k_new, v_new = L.encode_kv_codes(k_new, v_new, aq)
+        k_pages_l = k_pages_l.at[page, off].set(
+            k_new.astype(k_pages_l.dtype))
+        v_pages_l = v_pages_l.at[page, off].set(
+            v_new.astype(v_pages_l.dtype))
+        attn = L.mha_prefill_paged(blk_params["attn"], h, cfg, positions,
+                                   k_pages_l, v_pages_l,
+                                   view.block_tables, start, kv_lens,
+                                   act_q=aq)
+        x = x + attn
+        h = L.apply_norm(blk_params["ln2"], x, cfg)
+        if cfg.is_moe:
+            y, a = M.apply_moe(blk_params["moe"], h, cfg, act_q=aq)
+        else:
+            y, a = (L.apply_mlp(blk_params["mlp"], h, cfg, act_q=aq),
+                    jnp.zeros((), jnp.float32))
+        return (L.constrain_act(x + y), aux + a), (k_pages_l, v_pages_l)
+
+    (x, _aux), (ks, vs) = scan_blocks(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (params["blocks"], view.k_pages, view.v_pages), cfg)
+    x = L.apply_norm(params["ln_f"], x, cfg)
+    logits = L.logits_fn(params, x, cfg)                      # [B, S, V]
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)    # [B, S]
+    # accept = length of the leading run where the model's own greedy
+    # choice equals the next drafted token — exactly the tokens vanilla
+    # single-step decoding would have produced, in order
+    in_window = jnp.arange(s - 1)[None, :] < (valid - 1)[:, None]
+    match = (greedy[:, :-1] == tokens[:, 1:]) & in_window     # [B, S-1]
+    accept = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    finite = jnp.all(jnp.isfinite(logits), axis=-1)           # [B, S]
+    at_valid = jnp.arange(s)[None, :] < valid[:, None]
+    ok = jnp.all(jnp.where(at_valid, finite, True), axis=1)   # [B]
+    return greedy, accept.astype(jnp.int32), ok, \
+        view._replace(k_pages=ks, v_pages=vs)
+
+
 # ----------------------------------------------------- act calibration --
 
 def collect_act_calibration(params, tokens: jax.Array, cfg: ModelConfig):

@@ -168,6 +168,60 @@ def fit_sites(samples: dict, bits: int):
     return act_q, report
 
 
+def measure_sqnr(samples: dict, act_q: dict) -> dict[str, float]:
+    """Round-trip SQNR (dB) of captured float activations under
+    *already-fitted* tables — the serving-time counterpart of the
+    calibration report.  ``samples`` is ``{site: [L, ...]}`` from the
+    model's calibration hook on live traffic; each (layer, site) —
+    and each head for :data:`PER_HEAD_SITES` — round-trips through its
+    own packed qmeta (``encode_meta``/``decode_meta``, exactly the
+    serving encode).  Returns one scalar per site present in both
+    dicts (mean over layers, and heads where applicable): the number
+    the drift guard compares against the report."""
+    def one(t, qmeta):
+        t = t.reshape(-1).astype(jnp.float32)
+        back = eq.decode_meta(eq.encode_meta(t, qmeta), qmeta)
+        num = jnp.sum(t * t)
+        den = jnp.sum((t - back) ** 2) + 1e-12
+        return 10.0 * jnp.log10(num / den + 1e-12)
+
+    out: dict[str, float] = {}
+    for site, x_l in samples.items():
+        if site not in act_q:
+            continue
+        qmeta = jnp.asarray(act_q[site]["qmeta"], jnp.float32)
+        f = jax.vmap(one)
+        if site in PER_HEAD_SITES:
+            ax = PER_HEAD_SITES[site] % x_l.ndim
+            x_l = jnp.moveaxis(x_l, ax, 1)          # [L, n_kv, ...]
+            x_l = x_l.reshape(x_l.shape[0], x_l.shape[1], -1)
+            f = jax.vmap(f)
+        out[site] = float(jnp.mean(f(x_l, qmeta)))
+    return out
+
+
+def report_means(report: dict | None) -> dict[str, float]:
+    """Per-site mean SQNR from a calibration report, flattening the
+    per-head nesting — the drift guard's reference line."""
+    if not report:
+        return {}
+    return {site: float(np.mean(np.asarray(v, np.float64)))
+            for site, v in report.items()}
+
+
+def kv_tables_fingerprint(act_q: dict) -> int:
+    """CRC32 over the packed per-head attn_k/attn_v metas — the
+    identity of a codes-mode KV byte stream.  Two engines share a
+    fingerprint iff their u8 pages decode through identical tables,
+    which is what makes a cross-worker page handoff legal."""
+    crc = 0
+    for site in ("attn_k", "attn_v"):
+        q = np.ascontiguousarray(np.asarray(act_q[site]["qmeta"],
+                                            np.float32))
+        crc = zlib.crc32(q.tobytes(), crc)
+    return crc
+
+
 def _act_q_from_entry(entry: dict):
     act_q = {}
     for site, metas in entry["sites"].items():
@@ -269,4 +323,5 @@ def calibrate_act_quant(api, params, cfg, bits: int,
 
 __all__ = ["calibrate_act_quant", "attach_act_quant", "fit_sites",
            "cache_path", "calib_key", "lut_from_qmeta",
+           "measure_sqnr", "report_means", "kv_tables_fingerprint",
            "PER_HEAD_SITES"]

@@ -202,6 +202,7 @@ class Cluster:
                  cluster: ClusterConfig | None = None,
                  engine: EngineConfig | None = None,
                  kv_dtype="float32",
+                 kv_codes: bool = False,
                  chaos: ChaosConfig | ChaosInjector | None = None,
                  telemetry: Telemetry | None = None):
         self.cluster_cfg = cluster or ClusterConfig()
@@ -238,17 +239,24 @@ class Cluster:
                          act_quant=act_quant if params is None else None,
                          calib_prompts=calib_prompts,
                          engine=worker_cfg("prefill"),
-                         kv_dtype=kv_dtype, chaos=self.chaos,
+                         kv_dtype=kv_dtype, kv_codes=kv_codes,
+                         chaos=self.chaos,
                          telemetry=self.telemetry,
                          worker_name=f"prefill{i}", worker_id=i)
             if params is None:
                 # every worker serves the same model: quantize/calibrate
-                # once on worker 0, share the tree (single process)
+                # once on worker 0, share the tree (single process) —
+                # with kv_codes this is also the table broadcast: the
+                # per-(layer, KV-head) calibration tables ride the
+                # shared params into every worker's dispatch, so all
+                # pools encode/decode u8 pages identically (same
+                # kv_fingerprint — import_slot handoffs validate it)
                 params = eng.params
             self.prefill.append(eng)
         self.decode: list[Engine] = [
             Engine(cfg, params=params, engine=worker_cfg("decode"),
-                   kv_dtype=kv_dtype, chaos=self.chaos,
+                   kv_dtype=kv_dtype, kv_codes=kv_codes,
+                   chaos=self.chaos,
                    telemetry=self.telemetry, worker_name=f"decode{j}",
                    worker_id=cc.prefill_workers + j)
             for j in range(cc.decode_workers)]

@@ -101,6 +101,7 @@ import json
 import math
 import os
 import time
+import warnings
 from collections import deque
 from typing import Iterator, Sequence
 
@@ -112,6 +113,7 @@ from repro.configs.base import ModelConfig
 from repro.core import lama_layers as ll
 from repro.models import api as mapi
 from repro.runtime.chaos import ChaosConfig, ChaosInjector
+from repro.runtime.drafter import PromptLookupDrafter
 from repro.runtime.fault_tolerance import LatencyTracker, StragglerWatchdog
 from repro.runtime.paged_cache import TRASH_PAGE, PagedKVCache
 from repro.runtime.prefix_cache import PrefixCache, PrefixNode
@@ -175,6 +177,22 @@ class EngineConfig:
     quarantine_ticks: int = 8     # lane rest after a non-finite dispatch
     replay_dir: str | None = None  # where failed-request artifacts land
     role: str = "unified"         # unified | prefill | decode (cluster)
+    # Speculative decoding (prompt-lookup drafting + one verification
+    # dispatch per tick).  spec_k = drafted tokens per slot per tick;
+    # 0 disables the path entirely — the vanilla single-token decode
+    # dispatch runs untouched.
+    spec_k: int = 0
+    spec_max_ngram: int = 3       # longest n-gram the drafter matches
+    spec_min_ngram: int = 1       # shortest n-gram worth proposing from
+    # Calibration drift guard: every N ticks re-measure per-site SQNR
+    # of live traffic under the attached act-quant tables and compare
+    # against the calibration report (0 disables).  Detection only —
+    # a drop past drift_threshold_db logs a warning; refit is manual.
+    # The report is measured on the samples the fit optimized, so
+    # in-distribution traffic already sits a few dB below it
+    # (generalization gap); the default leaves headroom over that.
+    drift_check_every: int = 0
+    drift_threshold_db: float = 6.0
 
 
 @dataclasses.dataclass
@@ -199,6 +217,11 @@ class KVHandoff:
     prefill_s: float = 0.0
     preemptions: int = 0
     source: int | None = None     # filled by the cluster: worker index
+    # codes-mode pages are meaningless without the tables that decode
+    # them: a CRC over the exporter's per-head attn_k/attn_v qmeta
+    # (None for float pages), checked by inject_prefilled so a handoff
+    # never lands in a pool keyed to different calibration tables
+    kv_fingerprint: int | None = None
     # the request's Trace rides the handoff, so its timeline stays
     # contiguous across the prefill->decode worker boundary; flow_id
     # pairs the export-side trace arrow with the import side
@@ -253,6 +276,16 @@ def _jit_decode(step_fn):
         ok = jnp.all(jnp.isfinite(last), axis=-1)
         return nxt, ok, view
     return jax.jit(fn, static_argnums=(4,), donate_argnums=_donate(1))
+
+
+@functools.lru_cache(maxsize=None)
+def _jit_spec_verify(verify_fn):
+    """One speculative verify-and-commit dispatch: greedy tokens,
+    accept counts, and finite flags all computed in-dispatch (same
+    one-host-round-trip discipline as the decode step)."""
+    def fn(params, tokens, view, start, n_tokens, cfg):
+        return verify_fn(params, tokens, view, cfg, start, n_tokens)
+    return jax.jit(fn, static_argnums=(5,), donate_argnums=_donate(2))
 
 
 @dataclasses.dataclass
@@ -340,6 +373,12 @@ class Engine:
         if ec.role not in ENGINE_ROLES:
             raise ValueError(f"role must be one of {ENGINE_ROLES}, "
                              f"got {ec.role!r}")
+        if ec.spec_k < 0:
+            raise ValueError(f"spec_k must be >= 0 (0 disables "
+                             f"speculation), got {ec.spec_k}")
+        if ec.drift_check_every < 0:
+            raise ValueError(f"drift_check_every must be >= 0 (0 "
+                             f"disables), got {ec.drift_check_every}")
         self.chaos: ChaosInjector | None = (
             ChaosInjector(chaos) if isinstance(chaos, ChaosConfig) else chaos)
         # the CRC audit is the *detector* for KV corruption: auto-arm it
@@ -349,14 +388,12 @@ class Engine:
         self.kv_dtype = jnp.dtype(kv_dtype)
         self.kv_codes = bool(kv_codes)
         if self.kv_codes:
-            if act_quant is None:
-                raise ValueError(
-                    "kv_codes=True requires act_quant bits: the per-head "
-                    "K/V code tables come from activation calibration")
             # codes-mode cache: pages hold u8 DNA-TEQ exponent codes
             # (1 B/elem); the attention kernels decode them through
             # per-head LUTs in VMEM and the block is code-in/code-out
-            # through attention
+            # through attention.  The per-head tables must exist by the
+            # time params are final — validated below, after the
+            # calibration step has had its chance to fit them.
             self.kv_dtype = jnp.dtype(jnp.uint8)
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
@@ -382,6 +419,27 @@ class Engine:
                 prompts=calib_prompts,
                 seq_len=min(32, self.engine_cfg.max_seq_len))
         self.params = params
+
+        # codes-mode needs the per-head attn_k/attn_v tables attached —
+        # either fit just above (act_quant bits) or already riding the
+        # params tree (a cluster worker sharing worker 0's calibrated
+        # params).  The fingerprint keys cross-worker handoffs: u8
+        # pages only decode correctly under the tables they were
+        # encoded with.
+        self._kv_fingerprint: int | None = None
+        if self.kv_codes:
+            from repro.runtime.calibration import kv_tables_fingerprint
+
+            aq = (params.get("blocks", {}).get("act_q")
+                  if isinstance(params, dict) else None)
+            if not (isinstance(aq, dict)
+                    and "attn_k" in aq and "attn_v" in aq):
+                raise ValueError(
+                    "kv_codes=True requires act_quant bits: the per-head "
+                    "K/V code tables come from activation calibration "
+                    "(pass act_quant=<bits> or params that already carry "
+                    "the calibrated attn_k/attn_v tables)")
+            self._kv_fingerprint = kv_tables_fingerprint(aq)
 
         max_blk = math.ceil(ec.max_seq_len / ec.block_size)
         num_blocks = ec.num_blocks
@@ -445,6 +503,31 @@ class Engine:
         self._prefill = _jit_prefill(self.api.prefill_into_cache)
         self._decode = _jit_decode(self.api.decode_step_paged)
 
+        # ------------------------------------------ speculative decode
+        # spec_k=0 keeps this path entirely cold: no drafter, no extra
+        # compile, the vanilla single-token decode dispatch untouched.
+        self.drafter: PromptLookupDrafter | None = None
+        self._spec_verify = None
+        if ec.spec_k > 0:
+            if self.api.spec_verify_into_cache is None:
+                raise ValueError(
+                    f"spec_k={ec.spec_k}: model family {cfg.family!r} "
+                    f"has no speculative verification path "
+                    f"(spec_verify_into_cache)")
+            self.drafter = PromptLookupDrafter(
+                ec.spec_k, max_ngram=ec.spec_max_ngram,
+                min_ngram=ec.spec_min_ngram)
+            self._spec_verify = _jit_spec_verify(
+                self.api.spec_verify_into_cache)
+
+        # ------------------------------------------------- drift guard
+        # last-admitted prompt, fixed-size so the periodic probe shares
+        # one compile; per-site SQNR results backing the gauges
+        self._drift_probe: np.ndarray | None = None
+        self._drift_db: dict[str, float] = {}
+        self._drift_delta_db: dict[str, float] = {}
+        self._drift_registered: set[str] = set()
+
     def _register_gauges(self) -> None:
         """Callback gauges over live engine state: evaluated at read
         time, so the registry is always current and the hot path pays
@@ -460,6 +543,10 @@ class Engine:
         s.gauge("engine.tick.p50_s", lambda: self.tick_latency.percentile(50))
         s.gauge("engine.tick.p99_s", lambda: self.tick_latency.percentile(99))
         s.gauge("engine.tick.mean_s", lambda: self.tick_latency.mean_s)
+        s.gauge("engine.spec.accept_rate",
+                lambda: (self.spec_accepted / self.spec_proposed
+                         if self.spec_proposed else 0.0),
+                help="drafted tokens accepted / drafted tokens verified")
         self.cache.register_metrics(s)
         if self.prefix is not None:
             s.gauge("engine.prefix.queries", lambda: self.prefix.stats.queries)
@@ -499,6 +586,12 @@ class Engine:
         st = _SeqState(request, seq_no=self._seq_counter,
                        submit_t=self._clock())
         st.trace = Trace(request.uid, st.submit_t)
+        if self.engine_cfg.drift_check_every and plen:
+            # drift guard probes live traffic: remember the newest
+            # prompt, resized to one fixed shape so the periodic
+            # calibration forward shares a single compile
+            self._drift_probe = np.resize(
+                np.asarray(request.prompt, np.int32), 32)
         self._seq_counter += 1
         self._states[request.uid] = st
         ec = self.engine_cfg
@@ -554,6 +647,12 @@ class Engine:
             raise ValueError(
                 f"handoff block_size {handoff.block_size} != engine "
                 f"block_size {self.engine_cfg.block_size}")
+        if handoff.kv_fingerprint != self._kv_fingerprint:
+            raise ValueError(
+                f"request {req.uid}: handoff KV table fingerprint "
+                f"{handoff.kv_fingerprint} != this worker's "
+                f"{self._kv_fingerprint} — codes-mode pages only decode "
+                f"under the calibration tables they were encoded with")
         if handoff.length + req.max_new_tokens > self.engine_cfg.max_seq_len:
             raise ValueError(
                 f"request {req.uid}: prefilled {handoff.length} + max_new "
@@ -710,6 +809,9 @@ class Engine:
                 time.sleep(delay)
         self._expire_deadlines()
         self._audit_pages()
+        ec = self.engine_cfg
+        if ec.drift_check_every and self._tick_no % ec.drift_check_every == 0:
+            self._drift_check()
         for slot in [s for s, until in self._quarantined.items()
                      if until <= self._tick_no]:
             del self._quarantined[slot]
@@ -793,6 +895,16 @@ class Engine:
         if not active:
             return []
 
+        # speculative path: when any slot has a prompt-lookup proposal
+        # this tick becomes ONE verification dispatch (draftless rows
+        # ride along as single-token steps); with no proposals anywhere
+        # fall through to the vanilla dispatch — an adversarial stream
+        # pays nothing for having speculation enabled
+        if self.drafter is not None:
+            drafts = self._draft(active)
+            if drafts:
+                return self._spec_tick(active, drafts)
+
         ec = self.engine_cfg
         tokens = np.zeros((ec.num_slots, 1), np.int32)
         active_mask = np.zeros((ec.num_slots,), bool)
@@ -847,6 +959,131 @@ class Engine:
             if self._checksum:
                 page = int(self.cache.block_tables[i, pre_pos[i] // bs])
                 self._page_crc[page] = self.cache.page_checksum(page)
+            if self._should_stop(st):
+                finished.append(self._retire(i))
+        return finished
+
+    # ------------------------------------------------ speculative decode
+    def _draft(self, active) -> dict[int, np.ndarray]:
+        """Per-slot prompt-lookup proposals for this tick, clamped so a
+        fully accepted window can neither overflow the request's token
+        budget (accept+1 committed tokens must fit ``max_new_tokens``)
+        nor write past the slot's owned pages — speculation never
+        allocates a page vanilla decode would not have (``_grow``
+        already ran, so one free position is guaranteed)."""
+        ec = self.engine_cfg
+        bs = ec.block_size
+        drafts: dict[int, np.ndarray] = {}
+        for i, st in active:
+            budget = st.request.max_new_tokens - len(st.tokens) - 1
+            pos = int(self.cache.lengths[i])
+            cap = len(self.cache.slot_blocks[i]) * bs - pos - 1
+            k = min(ec.spec_k, budget, cap)
+            if k < 1:
+                continue
+            d = self.drafter.propose(st.full_prompt(), k=k)
+            if len(d):
+                drafts[i] = d
+        return drafts
+
+    def _spec_tick(self, active, drafts) -> list[Completion]:
+        """One speculative verify-and-commit dispatch across every
+        active slot.  Each drafted row scores its undecoded next token
+        plus its proposals through the chunked-flash window; greedy
+        argmax acceptance commits ``drafts[:accept]`` plus the model's
+        own token at the first divergence — exactly the tokens vanilla
+        single-stepping would have produced — and the rejected tail is
+        simply *not counted*: ``lengths`` advances only over committed
+        positions, pages never move, and the garbage KV beyond the
+        write cursor is masked out of every later attend until
+        overwritten.  Mixed ticks are free: draftless rows run with a
+        one-token window in the same dispatch."""
+        ec = self.engine_cfg
+        bs = ec.block_size
+        width = ec.spec_k + 1
+        toks = np.zeros((ec.num_slots, width), np.int32)
+        n_tok = np.zeros((ec.num_slots,), np.int32)
+        # idle rows: start = length with zero valid tokens ⇒ trash
+        # writes, zero attention (same parking trick as chunked prefill)
+        start = np.asarray(self.cache.lengths, np.int32).copy()
+        pre_pos: dict[int, int] = {}
+        cols_need = 1
+        for i, st in active:
+            d = drafts.get(i)
+            n = 1 + (len(d) if d is not None else 0)
+            toks[i, 0] = st.next_token
+            if d is not None:
+                toks[i, 1:1 + len(d)] = d
+                self.spec_proposed += len(d)
+            n_tok[i] = n
+            pre_pos[i] = int(self.cache.lengths[i])
+            self._attn_accounting(n, pre_pos[i] + n)
+            cols_need = max(cols_need, -(-(pre_pos[i] + n) // bs))
+        cols = min(self._pow2(cols_need), self.cache.max_blocks_per_seq)
+
+        t0 = self._clock()
+        # host arrays go straight into the jitted call: pjit ingests
+        # them on its C fast path, and three explicit device_puts per
+        # tick are measurable against a sub-millisecond dispatch
+        g_dev, acc_dev, ok_dev, view = self._spec_verify(
+            self.params, toks, self.cache.view(cols=cols),
+            start, n_tok, self.cfg)
+        g = np.asarray(g_dev)       # blocks until the dispatch is done
+        acc = np.asarray(acc_dev)
+        ok = np.array(ok_dev)       # writable: chaos may force a row low
+        t1 = self._clock()
+        dt = t1 - t0
+        self.cache.update_pages(view)
+        self.total_decode_steps += 1
+        self.spec_dispatches += 1
+        if self.chaos is not None:
+            bad = self.chaos.nan_slot([i for i, _ in active])
+            if bad is not None:
+                ok[bad] = False     # identical path to a real device NaN
+        finished: list[Completion] = []
+        for i, st in active:
+            if not ok[i]:
+                self.nan_rows_detected += 1
+                self._quarantine(i)
+                self._fault(st, "nan_logits")
+                continue
+            d = drafts.get(i)
+            a = int(acc[i]) if d is not None else 0
+            self.spec_accepted += a
+            committed = [int(t) for t in (d[:a] if d is not None else ())]
+            committed.append(int(g[i, a]))
+            stop = st.request.stop_token
+            if stop is not None and stop in committed:
+                # vanilla would have stopped AT the stop token: commit
+                # through it and drop the (correctly verified but now
+                # out-of-sequence) tokens behind it
+                committed = committed[:committed.index(stop) + 1]
+            st.decode_steps += 1
+            st.decode_s += dt
+            st.tokens.extend(committed)
+            st.next_token = committed[-1]
+            # the commit IS the rewind: only committed positions count;
+            # position len(committed) holds the still-unwritten KV slot
+            # of next_token, exactly the vanilla invariant
+            self.cache.lengths[i] = pre_pos[i] + len(committed)
+            self._tick_tokens += len(committed)
+            if self.tracer.enabled:
+                self.tracer.complete(self.worker_id, lane_tid(i),
+                                     "spec_decode", t0, t1,
+                                     uid=st.request.uid,
+                                     tokens=len(committed), accepted=a)
+                if st.trace is not None:
+                    st.trace.stamp(
+                        "spec_verify", t1, slot=i, accepted=a,
+                        proposed=(len(d) if d is not None else 0))
+            if self._checksum:
+                # every page the window touched, accepted or not: the
+                # rejected tail's bytes are live page content until
+                # overwritten, and the audit must track what is there
+                for c in range(pre_pos[i] // bs,
+                               (pre_pos[i] + int(n_tok[i]) - 1) // bs + 1):
+                    page = int(self.cache.block_tables[i, c])
+                    self._page_crc[page] = self.cache.page_checksum(page)
             if self._should_stop(st):
                 finished.append(self._retire(i))
         return finished
@@ -1096,6 +1333,50 @@ class Engine:
                     self._page_crc.pop(freed, None)
             self._page_crc.pop(page, None)
 
+    def _drift_check(self) -> None:
+        """Calibration drift guard: re-measure per-site round-trip SQNR
+        on a live prompt under the *attached* act-quant tables and
+        compare against the calibration report's per-site mean.
+        Detection only — a site whose serving SQNR fell more than
+        ``drift_threshold_db`` below the report logs a warning and
+        bumps ``calib.drift.warnings``; refitting stays manual (the
+        ROADMAP follow-up).  Results back the ``calib.drift.<site>_db``
+        / ``_delta_db`` gauges, registered lazily on first sight."""
+        aq = (self.params.get("blocks", {}).get("act_q")
+              if isinstance(self.params, dict) else None)
+        if (aq is None or self._drift_probe is None
+                or self.api.collect_act_calibration is None):
+            return
+        from repro.runtime.calibration import measure_sqnr, report_means
+
+        samples = self.api.collect_act_calibration(
+            self.params, jnp.asarray(self._drift_probe[None, :]), self.cfg)
+        cur = measure_sqnr(samples, aq)
+        ref = report_means(self.act_report)
+        self.drift_checks += 1
+        thr = self.engine_cfg.drift_threshold_db
+        for site, db in cur.items():
+            self._drift_db[site] = db
+            delta = db - ref[site] if site in ref else 0.0
+            self._drift_delta_db[site] = delta
+            if site not in self._drift_registered:
+                self._drift_registered.add(site)
+                self._scope.gauge(
+                    f"calib.drift.{site}_db",
+                    lambda s=site: self._drift_db.get(s, 0.0),
+                    help="serving-time round-trip SQNR at this site")
+                self._scope.gauge(
+                    f"calib.drift.{site}_delta_db",
+                    lambda s=site: self._drift_delta_db.get(s, 0.0),
+                    help="serving SQNR minus the calibration-report mean")
+            if site in ref and delta < -thr:
+                self.drift_warnings += 1
+                warnings.warn(
+                    f"calibration drift at {site}: serving SQNR "
+                    f"{db:.1f} dB is {-delta:.1f} dB below the "
+                    f"calibration report ({ref[site]:.1f} dB) — "
+                    f"consider refitting the act-quant tables")
+
     def _free_slot(self) -> int | None:
         """Lowest free slot index that is not quarantined, else None."""
         for i, s in enumerate(self._slots):
@@ -1146,7 +1427,8 @@ class Engine:
                       block_size=self.engine_cfg.block_size,
                       submit_t=st.submit_t, admit_t=st.admit_t,
                       first_token_t=st.first_token_t,
-                      prefill_s=st.prefill_s, preemptions=st.preemptions)
+                      prefill_s=st.prefill_s, preemptions=st.preemptions,
+                      kv_fingerprint=self._kv_fingerprint)
         # detach the trace INTO the handoff before retiring: the
         # request is not terminal — it continues on a decode worker —
         # so no terminal span here; the flow arrow (closed at import,
@@ -1646,6 +1928,17 @@ _ENGINE_COUNTERS = {
         ("engine.faults.slow_ticks", "watchdog-flagged scheduler ticks"),
     "quarantines":
         ("engine.faults.quarantines", "slot lanes rested after a fault"),
+    "spec_dispatches":
+        ("engine.spec.dispatches", "speculative verify dispatches run"),
+    "spec_proposed":
+        ("engine.spec.proposed", "drafted tokens sent for verification"),
+    "spec_accepted":
+        ("engine.spec.accepted", "drafted tokens accepted by greedy "
+                                 "verification"),
+    "drift_checks":
+        ("calib.drift.checks", "drift-guard SQNR probes run"),
+    "drift_warnings":
+        ("calib.drift.warnings", "site probes past drift_threshold_db"),
 }
 
 

@@ -46,7 +46,8 @@ class InferenceServer:
                  num_slots: int = 8, block_size: int = 16,
                  prefix_cache: bool = True, prefill_chunk: int = 256,
                  max_queue: int | None = None,
-                 shed_policy: str = "reject-new"):
+                 shed_policy: str = "reject-new",
+                 spec_k: int = 0):
         """``kv_dtype``: KV-cache storage dtype — "float32"/"bfloat16"
         for full fidelity, "float8_e4m3fn" for the narrow-byte cache
         (dequantized in-kernel by ``decode_gqa``).  ``num_slots`` /
@@ -66,7 +67,9 @@ class InferenceServer:
         bucketed fallback stays fp-act).  ``kv_codes`` stores KV pages
         as calibrated u8 DNA-TEQ exponent codes decoded through
         per-head LUTs inside the attention kernels (requires
-        ``act_quant``); applies to the Engine path only."""
+        ``act_quant``); applies to the Engine path only.  ``spec_k``
+        enables speculative decoding (prompt-lookup drafts, up to k
+        verified per tick); served tokens are identical either way."""
         self.cfg = cfg
         self.api = mapi.get_model(cfg)
         self.max_len = max_len
@@ -82,6 +85,7 @@ class InferenceServer:
         # submits resolve per shed_policy and complete status=rejected
         self.max_queue = max_queue
         self.shed_policy = shed_policy
+        self.spec_k = int(spec_k)
         self.act_quant = act_quant
         if params is None:
             params = self.api.init(jax.random.PRNGKey(rng_seed),
@@ -122,7 +126,8 @@ class InferenceServer:
             prefix_cache=self.prefix_cache,
             prefill_chunk=self.prefill_chunk,
             max_queue=self.max_queue,
-            shed_policy=self.shed_policy)
+            shed_policy=self.shed_policy,
+            spec_k=self.spec_k)
         if self.last_engine is None or self.last_engine.engine_cfg != ec:
             self.last_engine = Engine(self.cfg, params=self.params,
                                       act_quant=self.act_quant,

@@ -321,3 +321,74 @@ class TestClusterConfigValidation:
         cfg = tiny_cfg()
         with pytest.raises(ValueError, match="role"):
             Engine(cfg, engine=ecfg(role="router"))
+
+
+class TestClusterKVCodes:
+    """kv_codes through the disaggregated path: worker 0 calibrates,
+    the shared params broadcast the per-head K/V tables to every
+    worker, and cross-worker page handoffs are keyed to one table
+    fingerprint — u8 pages never land in a pool that would decode them
+    through different calibration."""
+
+    @pytest.fixture
+    def isolated_caches(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_ACT_CALIB_CACHE",
+                           str(tmp_path / "act_calib.json"))
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "tune.json"))
+        return tmp_path
+
+    def test_codes_cluster_matches_unified_codes_engine(
+            self, isolated_caches):
+        cfg = tiny_cfg(vocab_size=128, d_ff=192)
+        reqs = [Request(i, prompt(cfg, 14 + 3 * i, seed=i, sys_seed=i % 2),
+                        max_new_tokens=5) for i in range(6)]
+        clone = lambda: [Request(r.uid, r.prompt, r.max_new_tokens)
+                         for r in reqs]
+        base = Engine(cfg, act_quant=7, kv_codes=True, engine=ecfg())
+        ref = tok_lists(base.generate(clone()))
+
+        # calibrated params carry the attn_k/attn_v tables, so the
+        # cluster takes them as the broadcast (no per-worker act_quant)
+        clu = Cluster(cfg, params=base.params, kv_codes=True,
+                      cluster=ClusterConfig(prefill_workers=2,
+                                            decode_workers=2),
+                      engine=ecfg())
+        fps = {e._kv_fingerprint for e in clu.prefill + clu.decode}
+        assert fps == {base._kv_fingerprint} and None not in fps
+        for r in clone():
+            clu.submit(r)
+        out = drain_audited(clu)
+        assert tok_lists(out) == ref
+        assert all(c.status == ST_OK for c in out)
+        assert clu.handoffs == len(reqs)
+        assert all(e.prefill_tokens_computed == 0 for e in clu.decode)
+
+    def test_handoffs_carry_the_table_fingerprint(self, isolated_caches):
+        cfg = tiny_cfg(vocab_size=128, d_ff=192)
+        clu = Cluster(cfg, act_quant=7, kv_codes=True,
+                      cluster=ClusterConfig(1, 1), engine=ecfg())
+        pw = clu.prefill[0]
+        pw.submit(Request(0, prompt(cfg, 20), max_new_tokens=4))
+        while not pw.outbox:
+            pw.step()
+        h = pw.take_handoffs()[0]
+        assert h.kv_fingerprint == pw._kv_fingerprint is not None
+        assert h.k_pages.dtype == np.uint8   # codes move as codes
+
+    def test_fingerprint_mismatch_rejected(self):
+        """A codes handoff must never import into a float pool (or a
+        pool keyed to different tables): inject_prefilled refuses
+        before any page is scattered."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=ecfg())       # float pages, fp None
+        n_pages = 3
+        k = np.zeros((cfg.num_layers, n_pages, 8, cfg.num_kv_heads,
+                      cfg.resolved_head_dim), np.uint8)
+        h = KVHandoff(request=Request(7, prompt(cfg, 20),
+                                      max_new_tokens=4),
+                      tokens=[5], length=20, k_pages=k, v_pages=k.copy(),
+                      block_size=8, kv_fingerprint=0xDEADBEEF)
+        with pytest.raises(ValueError, match="fingerprint"):
+            eng.inject_prefilled(h)
+        eng.check_partition()                  # nothing leaked

@@ -1,0 +1,486 @@
+"""Speculative decoding over the paged substrate: prompt-lookup
+drafting + one-dispatch chunked-flash verification.
+
+The headline property everywhere: greedy argmax acceptance is EXACT —
+a spec_k>0 engine serves byte-identical token streams to the vanilla
+single-token engine on any stream, any k, any prefill mode, because
+every accepted draft equals the token vanilla decoding would have
+produced and the first divergence commits the model's own argmax.
+Rejected tails never move pages: ``lengths`` simply doesn't advance
+over them, so the page-partition audit stays green through every
+accept/reject/rewind, and through cancel/preempt/deadline landing in
+the middle of a speculative window.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.runtime.chaos import ChaosConfig
+from repro.runtime.cluster import Cluster, ClusterConfig
+from repro.runtime.drafter import PromptLookupDrafter
+from repro.runtime.engine import (ST_CANCELLED, ST_DEADLINE, ST_OK,
+                                  TERMINAL_STATUSES, Engine, EngineConfig,
+                                  Request)
+
+
+def tiny_cfg(**kw):
+    base = dict(num_layers=2, d_model=64, d_ff=128, vocab_size=64,
+                compute_dtype="float32")
+    base.update(kw)
+    return get_config("qwen3-1.7b", tiny=True).replace(**base)
+
+
+def prompt(cfg, n, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+
+
+def ecfg(**kw):
+    base = dict(num_slots=4, block_size=8, max_seq_len=160,
+                prefill_chunk=16)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+def repetitive_prompts(cfg, ref_engine, n=6, boot=24, max_new=48):
+    """Prompts in prompt-lookup's home regime: each is a short seed
+    plus a prefix of the model's own greedy rollout from that seed, so
+    decode reproduces the rollout's tail — spans the drafter can find
+    verbatim in the prompt."""
+    seeds = [prompt(cfg, 8, seed=100 + i) for i in range(n)]
+    boots = ref_engine.generate(
+        [Request(900 + i, s, max_new_tokens=boot + max_new)
+         for i, s in enumerate(seeds)])
+    return [np.concatenate([s, np.asarray(c.tokens[:boot], np.int32)])
+            for s, c in zip(seeds, sorted(boots, key=lambda c: c.uid))]
+
+
+def drain_checked(eng):
+    while eng.pending:
+        eng.step()
+        eng.check_partition()
+    done = eng.run()
+    eng.check_partition()
+    return sorted(done, key=lambda c: c.uid)
+
+
+def tok_lists(outs):
+    return [np.asarray(c.tokens).tolist() for c in outs]
+
+
+# ------------------------------------------------------------ drafter --
+
+class TestPromptLookupDrafter:
+    def test_most_recent_ngram_continuation(self):
+        # trailing 3-gram (7,8,9) occurs twice earlier; the LATER one
+        # (followed by 30,31) must win
+        ctx = [7, 8, 9, 20, 21, 22, 7, 8, 9, 30, 31, 32, 7, 8, 9]
+        d = PromptLookupDrafter(2).propose(np.asarray(ctx, np.int32))
+        assert d.tolist() == [30, 31]
+
+    def test_longer_ngram_preferred(self):
+        # 1-gram "9" recurs at index 0 (followed by 50), but the full
+        # 2-gram (8, 9) recurs at 3-4 (followed by 60) — the 2-gram
+        # match must be chosen over the more recent... the point is n
+        # descends: 2-gram first, regardless of 1-gram hits elsewhere
+        ctx = [9, 50, 0, 8, 9, 60, 1, 8, 9]
+        d = PromptLookupDrafter(1).propose(np.asarray(ctx, np.int32))
+        assert d.tolist() == [60]
+
+    def test_no_match_is_empty(self):
+        d = PromptLookupDrafter(4).propose(
+            np.asarray([1, 2, 3, 4, 5], np.int32))
+        assert d.size == 0
+
+    def test_k_clamp_and_tail_truncation(self):
+        # the continuation reaches the end of the context: the draft
+        # is whatever remains, not padded
+        ctx = [5, 6, 7, 5, 6]
+        d = PromptLookupDrafter(8).propose(np.asarray(ctx, np.int32))
+        assert d.tolist() == [7, 5, 6]
+        d = PromptLookupDrafter(8).propose(np.asarray(ctx, np.int32), k=1)
+        assert d.tolist() == [7]
+
+    def test_min_ngram_gate(self):
+        # with min_ngram=2 a lone 1-gram recurrence must NOT draft
+        ctx = [3, 9, 1, 2, 3]
+        assert PromptLookupDrafter(2, min_ngram=2).propose(
+            np.asarray(ctx, np.int32)).size == 0
+        assert PromptLookupDrafter(2, min_ngram=1).propose(
+            np.asarray(ctx, np.int32)).tolist() == [9, 1]
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="k must be"):
+            PromptLookupDrafter(0)
+        with pytest.raises(ValueError, match="min_ngram"):
+            PromptLookupDrafter(2, max_ngram=2, min_ngram=3)
+        with pytest.raises(ValueError, match="min_ngram"):
+            PromptLookupDrafter(2, max_ngram=2, min_ngram=0)
+
+    def test_matches_sliding_window_reference(self):
+        def ref(ctx, k, max_ngram, min_ngram):
+            ctx = np.asarray(ctx, np.int32)
+            n_ctx = len(ctx)
+            if k < 1 or n_ctx < min_ngram + 1:
+                return np.zeros((0,), np.int32)
+            for n in range(min(max_ngram, n_ctx - 1), min_ngram - 1, -1):
+                suffix = ctx[-n:]
+                win = np.lib.stride_tricks.sliding_window_view(ctx, n)
+                hits = np.flatnonzero(
+                    (win[:n_ctx - n] == suffix[None, :]).all(axis=1))
+                if len(hits):
+                    s = int(hits[-1]) + n
+                    return ctx[s:s + k].copy()
+            return np.zeros((0,), np.int32)
+
+        rng = np.random.default_rng(7)
+        for _ in range(500):
+            n_ctx = int(rng.integers(1, 40))
+            ctx = rng.integers(0, int(rng.integers(2, 10)),
+                               n_ctx).astype(np.int32)
+            mn = int(rng.integers(1, 4))
+            mx = mn + int(rng.integers(0, 3))
+            k = int(rng.integers(1, 6))
+            got = PromptLookupDrafter(k, max_ngram=mx,
+                                      min_ngram=mn).propose(ctx)
+            assert np.array_equal(got, ref(ctx, k, mx, mn))
+
+
+# ----------------------------------------------------- token identity --
+
+class TestTokenIdentity:
+    """spec_k>0 must be a pure perf knob: byte-identical tokens to the
+    vanilla engine in every prefill mode, with speculation genuinely
+    exercised (dispatches happen, drafts get accepted)."""
+
+    @pytest.mark.parametrize("k", [1, 4, 8])
+    def test_cold_engine_identical(self, k):
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, ref)
+        reqs = lambda: [Request(i, p, max_new_tokens=48)
+                        for i, p in enumerate(prompts)]
+        spec = Engine(cfg, params=ref.params,
+                      engine=ecfg(prefix_cache=False, spec_k=k))
+        base_out = ref.generate(reqs())
+        for r in reqs():
+            spec.submit(r)
+        spec_out = drain_checked(spec)
+        assert tok_lists(base_out) == tok_lists(spec_out)
+        assert spec.spec_dispatches > 0 and spec.spec_proposed > 0
+        assert spec.spec_accepted > 0   # home-turf stream: drafts land
+
+    @pytest.mark.parametrize("k", [1, 4, 8])
+    def test_warm_prefix_identical(self, k):
+        """Second wave hits the radix trie (partial prefills), and the
+        spec engine must still match vanilla token-for-token."""
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg())
+        prompts = repetitive_prompts(cfg, ref)
+        spec = Engine(cfg, params=ref.params, engine=ecfg(spec_k=k))
+        for wave in (0, 1):
+            reqs = lambda: [Request(10 * wave + i, p, max_new_tokens=32)
+                            for i, p in enumerate(prompts)]
+            base_out = ref.generate(reqs())
+            for r in reqs():
+                spec.submit(r)
+            spec_out = drain_checked(spec)
+            assert tok_lists(base_out) == tok_lists(spec_out), wave
+        assert spec.spec_dispatches > 0
+
+    @pytest.mark.parametrize("k", [1, 4, 8])
+    def test_chunked_prefill_identical(self, k):
+        """Long prompts prefill across several chunked ticks; decode
+        then speculates over the same pages those chunks wrote."""
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefill_chunk=8, prefix_cache=False))
+        long_prompts = [
+            np.concatenate([prompt(cfg, 12, seed=i)] * 3)  # 36 tokens
+            for i in range(5)]
+        reqs = lambda: [Request(i, p, max_new_tokens=24)
+                        for i, p in enumerate(long_prompts)]
+        spec = Engine(cfg, params=ref.params,
+                      engine=ecfg(prefill_chunk=8, prefix_cache=False,
+                                  spec_k=k))
+        base_out = ref.generate(reqs())
+        for r in reqs():
+            spec.submit(r)
+        spec_out = drain_checked(spec)
+        assert tok_lists(base_out) == tok_lists(spec_out)
+        assert spec.spec_dispatches > 0
+
+    def test_stop_token_truncates_inside_window(self):
+        """A stop token landing mid-window must retire the request AT
+        the stop, exactly where vanilla decoding stops."""
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, ref, n=4)
+        base_out = ref.generate(
+            [Request(i, p, max_new_tokens=48) for i, p in enumerate(prompts)])
+        base_out = sorted(base_out, key=lambda c: c.uid)
+        # stop at a token vanilla emits mid-stream, per request
+        stops = [c.tokens[len(c.tokens) // 2] for c in base_out]
+        reqs = lambda: [Request(i, p, max_new_tokens=48, stop_token=int(s))
+                        for i, (p, s) in enumerate(zip(prompts, stops))]
+        spec = Engine(cfg, params=ref.params,
+                      engine=ecfg(prefix_cache=False, spec_k=6))
+        base_stop = ref.generate(reqs())
+        for r in reqs():
+            spec.submit(r)
+        spec_stop = drain_checked(spec)
+        assert tok_lists(base_stop) == tok_lists(spec_stop)
+        for c in spec_stop:
+            assert c.tokens[-1] == stops[c.uid]
+
+    def test_max_new_tokens_never_exceeded(self):
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, ref)
+        spec = Engine(cfg, params=ref.params,
+                      engine=ecfg(prefix_cache=False, spec_k=8))
+        for i, p in enumerate(prompts):
+            spec.submit(Request(i, p, max_new_tokens=7))
+        for c in drain_checked(spec):
+            assert len(c.tokens) == 7
+
+
+# --------------------------------------------------- config validation --
+
+class TestSpecConfig:
+    def test_spec_k_zero_has_no_drafter(self):
+        eng = Engine(tiny_cfg(), engine=ecfg())
+        assert eng.drafter is None
+
+    def test_negative_spec_k_rejected(self):
+        with pytest.raises(ValueError, match="spec_k"):
+            Engine(tiny_cfg(), engine=ecfg(spec_k=-1))
+
+    def test_negative_drift_interval_rejected(self):
+        with pytest.raises(ValueError, match="drift_check_every"):
+            Engine(tiny_cfg(), engine=ecfg(drift_check_every=-1))
+
+    def test_adversarial_stream_falls_back_to_vanilla_dispatch(self):
+        """All-distinct-token prompts + short decode: ticks with no
+        proposals anywhere run the vanilla single-token dispatch (the
+        spec dispatch count stays below the decode step count)."""
+        cfg = tiny_cfg()
+        eng = Engine(cfg, engine=ecfg(spec_k=4, prefix_cache=False))
+        rng = np.random.default_rng(0)
+        for i in range(4):
+            eng.submit(Request(i, rng.permutation(cfg.vocab_size)[:20]
+                               .astype(np.int32), max_new_tokens=4))
+        drain_checked(eng)
+        assert eng.total_decode_steps > eng.spec_dispatches
+
+
+# ------------------------------------- lifecycle mid-speculation audit --
+
+class TestLifecycleMidSpec:
+    def test_cancel_mid_spec_keeps_audit_green(self):
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, ref, n=4)
+        eng = Engine(cfg, params=ref.params,
+                     engine=ecfg(prefix_cache=False, spec_k=6))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=48))
+        while eng.spec_dispatches == 0 and eng.pending:
+            eng.step()
+            eng.check_partition()
+        assert eng.cancel(0) and eng.cancel(2)
+        eng.check_partition()
+        done = drain_checked(eng)
+        statuses = {c.uid: c.status for c in done}
+        assert statuses[0] == ST_CANCELLED and statuses[2] == ST_CANCELLED
+        assert statuses[1] == ST_OK and statuses[3] == ST_OK
+
+    def test_deadline_mid_spec_keeps_audit_green(self):
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, ref, n=2)
+        eng = Engine(cfg, params=ref.params,
+                     engine=ecfg(prefix_cache=False, spec_k=6))
+        t0 = eng._clock()
+        eng._clock = lambda: t0
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=64, deadline_s=5.0))
+        while eng.spec_dispatches == 0 and eng.pending:
+            eng.step()
+            eng.check_partition()
+        eng._clock = lambda: t0 + 6.0
+        done = drain_checked(eng)
+        assert {c.status for c in done} == {ST_DEADLINE}
+
+    def test_preemption_under_page_pressure_with_spec(self):
+        """A pool too small for the whole batch forces preempt/resume
+        cycles; re-prefilled sequences must still decode (and keep
+        speculating) to the same terminal state, audit green."""
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, ref, n=4, max_new=32)
+        base_out = ref.generate(
+            [Request(i, p, max_new_tokens=32) for i, p in enumerate(prompts)])
+        eng = Engine(cfg, params=ref.params,
+                     engine=ecfg(prefix_cache=False, spec_k=4,
+                                 num_slots=4, num_blocks=28))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=32))
+        done = drain_checked(eng)
+        assert {c.status for c in done} <= set(TERMINAL_STATUSES)
+        assert tok_lists(sorted(base_out, key=lambda c: c.uid)) == \
+            tok_lists(done)
+
+    def test_chaos_storm_soak_with_spec(self):
+        """Seeded faults at every site while speculating: every request
+        terminal, no leaked pages, partition green after every tick."""
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, ref, n=12, max_new=24)
+        eng = Engine(cfg, params=ref.params,
+                     engine=ecfg(prefix_cache=False, spec_k=4,
+                                 num_blocks=40),
+                     chaos=ChaosConfig.storm(13))
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, max_new_tokens=24))
+        done = drain_checked(eng)
+        assert len(done) == len(prompts)
+        assert {c.status for c in done} <= set(TERMINAL_STATUSES)
+        assert any(c.status == ST_OK for c in done)
+
+    def test_snapshot_restore_mid_spec_run(self):
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, ref, n=4)
+        reqs = lambda: [Request(i, p, max_new_tokens=32)
+                        for i, p in enumerate(prompts)]
+        base_out = ref.generate(reqs())
+        eng = Engine(cfg, params=ref.params,
+                     engine=ecfg(prefix_cache=False, spec_k=6))
+        for r in reqs():
+            eng.submit(r)
+        while eng.spec_dispatches == 0 and eng.pending:
+            eng.step()
+        snap = eng.snapshot()
+        eng2 = Engine(cfg, params=ref.params,
+                      engine=ecfg(prefix_cache=False, spec_k=6))
+        assert eng2.restore(snap) == len(prompts)
+        done = drain_checked(eng2)
+        assert tok_lists(sorted(base_out, key=lambda c: c.uid)) == \
+            tok_lists(done)
+
+
+# ---------------------------------------------------------- composition --
+
+class TestCompose:
+    @pytest.fixture
+    def isolated_caches(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_ACT_CALIB_CACHE",
+                           str(tmp_path / "act_calib.json"))
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "tune.json"))
+        return tmp_path
+
+    def test_spec_with_kv_codes_identical(self, isolated_caches):
+        """Speculation over a uint8 exponent-coded cache: the verify
+        dispatch quantizes-at-write through the same per-head tables
+        as vanilla decode, so tokens stay identical to the non-spec
+        codes engine."""
+        cfg = tiny_cfg(vocab_size=128, d_ff=192)
+        codes = Engine(cfg, act_quant=7, kv_codes=True,
+                       engine=ecfg(prefix_cache=False))
+        prompts = repetitive_prompts(cfg, codes, n=4)
+        reqs = lambda: [Request(i, p, max_new_tokens=24)
+                        for i, p in enumerate(prompts)]
+        base_out = codes.generate(reqs())
+        spec = Engine(cfg, params=codes.params, act_quant=7, kv_codes=True,
+                      engine=ecfg(prefix_cache=False, spec_k=4))
+        for r in reqs():
+            spec.submit(r)
+        done = drain_checked(spec)
+        assert tok_lists(sorted(base_out, key=lambda c: c.uid)) == \
+            tok_lists(done)
+        assert spec.spec_dispatches > 0
+
+    def test_spec_on_cluster_identical_to_unified(self):
+        """2-prefill/2-decode cluster with speculating decode workers
+        == the unified non-spec engine, token for token."""
+        cfg = tiny_cfg()
+        ref = Engine(cfg, engine=ecfg())
+        prompts = repetitive_prompts(cfg, ref, n=6)
+        reqs = lambda: [Request(i, p, max_new_tokens=24)
+                        for i, p in enumerate(prompts)]
+        base_out = ref.generate(reqs())
+        clu = Cluster(cfg, params=ref.params,
+                      cluster=ClusterConfig(prefill_workers=2,
+                                            decode_workers=2),
+                      engine=ecfg(spec_k=4))
+        for r in reqs():
+            clu.submit(r)
+        done = []
+        while clu.pending:
+            done += clu.step()
+            clu.check_partition()
+        done = sorted(done, key=lambda c: c.uid)
+        assert tok_lists(sorted(base_out, key=lambda c: c.uid)) == \
+            tok_lists(done)
+        assert sum(w.spec_dispatches for w in clu.decode) > 0
+
+
+# ------------------------------------------------- calibration drift --
+
+class TestDriftGuard:
+    @pytest.fixture
+    def isolated_caches(self, tmp_path, monkeypatch):
+        monkeypatch.setenv("REPRO_ACT_CALIB_CACHE",
+                           str(tmp_path / "act_calib.json"))
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE",
+                           str(tmp_path / "tune.json"))
+        return tmp_path
+
+    def _run(self, threshold, isolated=None):
+        cfg = tiny_cfg(vocab_size=128, d_ff=192)
+        eng = Engine(cfg, act_quant=7,
+                     engine=ecfg(drift_check_every=4,
+                                 drift_threshold_db=threshold))
+        for i in range(4):
+            eng.submit(Request(i, prompt(cfg, 16, seed=i),
+                               max_new_tokens=16))
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            while eng.pending:
+                eng.step()
+            eng.run()
+        return eng, [w for w in caught
+                     if "calibration drift" in str(w.message)]
+
+    def test_gauges_registered_and_measured(self, isolated_caches):
+        eng, _ = self._run(threshold=6.0)
+        assert eng.drift_checks > 0
+        reg = eng.telemetry.registry
+        keys = [k for k in reg.keys() if k.startswith("calib.drift.")]
+        assert any(k.endswith("_db") for k in keys)
+        # per-site current SQNR must be a real number, not a sentinel
+        assert all(np.isfinite(v) for v in eng._drift_db.values())
+
+    def test_in_distribution_traffic_stays_quiet(self, isolated_caches):
+        """Serving the same distribution the tables were calibrated on
+        sits within the generalization-gap headroom: no warnings at
+        the default threshold."""
+        eng, warned = self._run(threshold=6.0)
+        assert eng.drift_warnings == 0 and not warned
+
+    def test_tight_threshold_warns(self, isolated_caches):
+        """A zero-headroom threshold flags the in-sample/live gap —
+        the warning path is detection-only (serving continues, every
+        request still completes)."""
+        eng, warned = self._run(threshold=0.0)
+        assert eng.drift_warnings > 0 and warned
+
+    def test_disabled_by_default(self, isolated_caches):
+        cfg = tiny_cfg(vocab_size=128, d_ff=192)
+        eng = Engine(cfg, act_quant=7, engine=ecfg())
+        eng.generate([Request(0, prompt(cfg, 16), max_new_tokens=8)])
+        assert eng.drift_checks == 0
